@@ -1,0 +1,55 @@
+"""Fig. 8 — index construction time + global-index (skeleton) size."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import default_cfg, emit
+from repro.baselines import build_dpisax, build_tardis
+from repro.core import build_index
+from repro.data import make_dataset
+
+
+def _skeleton_bytes(index) -> int:
+    f = index.forest
+    parts = [index.pivots, index.centroid_onehot]
+    arrays = [np.asarray(p) for p in parts] + [
+        f.child_start, f.edge_pivot, f.edge_child, f.edge_key, f.node_size,
+        f.node_depth, f.dfs_in, f.dfs_out, f.part_start, f.part_ids,
+        f.group_root, f.group_default_part]
+    return int(sum(a.nbytes for a in arrays))
+
+
+def run() -> None:
+    cfg = default_cfg()
+    for name in ("randomwalk", "sift", "dna", "eeg"):
+        data = make_dataset(name, jax.random.PRNGKey(0), 12_000, 128)
+        t0 = time.perf_counter()
+        index = build_index(jax.random.PRNGKey(1), data, cfg)
+        t_climber = time.perf_counter() - t0
+        emit(f"fig8/{name}/climber", t_climber * 1e6,
+             f"skeleton_bytes={_skeleton_bytes(index)};"
+             f"partitions={index.forest.num_partitions}")
+
+        t0 = time.perf_counter()
+        dp = build_dpisax(data, capacity=cfg.capacity)
+        emit(f"fig8/{name}/dpisax", (time.perf_counter() - t0) * 1e6,
+             f"partitions={dp.num_partitions}")
+
+        t0 = time.perf_counter()
+        td = build_tardis(jax.random.PRNGKey(2), data, capacity=cfg.capacity,
+                          sample_frac=cfg.sample_frac)
+        tb = sum(a.nbytes for a in (td.forest.child_start, td.forest.edge_pivot,
+                                    td.forest.edge_child, td.forest.edge_key))
+        emit(f"fig8/{name}/tardis", (time.perf_counter() - t0) * 1e6,
+             f"skeleton_bytes={tb};partitions={td.forest.num_partitions}")
+
+    # size sweep (Fig 8c/d)
+    for n in (4_000, 8_000, 16_000, 32_000):
+        data = make_dataset("randomwalk", jax.random.PRNGKey(3), n, 128)
+        t0 = time.perf_counter()
+        index = build_index(jax.random.PRNGKey(4), data, cfg)
+        emit(f"fig8/size{n}/climber", (time.perf_counter() - t0) * 1e6,
+             f"skeleton_bytes={_skeleton_bytes(index)}")

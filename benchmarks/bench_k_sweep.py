@@ -1,0 +1,36 @@
+"""Fig. 9 — recall + time under varying K for the three CLIMBER variants
+plus the iSAX baselines."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import default_cfg, emit, standard_setup, timed
+from repro.baselines import (build_dpisax, build_tardis, dpisax_knn,
+                             exact_knn, recall, tardis_knn)
+from repro.core import build_index, knn_query
+
+
+def run() -> None:
+    data, queries, _ = standard_setup("randomwalk", 16_000, k=50)
+    dp = build_dpisax(data, capacity=256)
+    td = build_tardis(jax.random.PRNGKey(1), data, capacity=256,
+                      sample_frac=0.15)
+
+    for k in (10, 50, 100, 250, 500):
+        _, exact_ids = exact_knn(queries, data, k)
+        for factor, tag in ((1, "knn"), (2, "adaptive2x"), (4, "adaptive4x")):
+            cfg = default_cfg(k=k, adaptive_factor=factor)
+            index = build_index(jax.random.PRNGKey(2), data, cfg)
+            variant = "knn" if factor == 1 else "adaptive"
+            (_, gid, plan), secs = timed(
+                lambda: knn_query(index, queries, k, variant=variant))
+            r = recall(np.asarray(gid), np.asarray(exact_ids))
+            emit(f"fig9/k{k}/climber-{tag}", secs * 1e6, f"recall={r:.3f}")
+
+        (_, gid_d), t_d = timed(lambda: dpisax_knn(dp, queries, k))
+        emit(f"fig9/k{k}/dpisax", t_d * 1e6,
+             f"recall={recall(np.asarray(gid_d), np.asarray(exact_ids)):.3f}")
+        (_, gid_t), t_t = timed(lambda: tardis_knn(td, queries, k))
+        emit(f"fig9/k{k}/tardis", t_t * 1e6,
+             f"recall={recall(np.asarray(gid_t), np.asarray(exact_ids)):.3f}")

@@ -1,0 +1,45 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle parity + the
+jnp-path throughput that the ED-refine/build hot loops actually achieve on
+this host (TPU timings are out of scope; see EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels import ref
+from repro.kernels.l2 import pairwise_l2
+from repro.kernels.paa_kernel import paa as paa_k
+from repro.kernels.pivot_rank import pivot_rank
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (64, 256))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096, 256))
+
+    (_, t_ref) = timed(jax.jit(ref.pairwise_l2_ref), q, x)
+    emit("kern/l2/ref_jnp", t_ref * 1e6,
+         f"gflops={2*64*4096*256/t_ref/1e9:.1f}")
+    out_k = pairwise_l2(q, x, interpret=True)
+    err = float(jnp.max(jnp.abs(out_k - ref.pairwise_l2_ref(q, x))))
+    emit("kern/l2/pallas_interpret", 0.0, f"max_abs_err={err:.2e}")
+
+    b = jax.random.normal(key, (8192, 256))
+    (_, t_paa) = timed(jax.jit(lambda v: ref.paa_ref(v, 16)), b)
+    emit("kern/paa/ref_jnp", t_paa * 1e6,
+         f"gbps={b.size*4/t_paa/1e9:.1f}")
+    err = float(jnp.max(jnp.abs(paa_k(b, 16, interpret=True)
+                                - ref.paa_ref(b, 16))))
+    emit("kern/paa/pallas_interpret", 0.0, f"max_abs_err={err:.2e}")
+
+    z = jax.random.normal(key, (4096, 16))
+    pv = jax.random.normal(jax.random.PRNGKey(2), (200, 16))
+    (_, t_pr) = timed(jax.jit(lambda a, p: ref.pivot_rank_ref(a, p, 10)), z, pv)
+    emit("kern/pivot_rank/ref_jnp", t_pr * 1e6,
+         f"msigs_per_s={4096/t_pr/1e6:.2f}")
+    same = bool(np.array_equal(
+        np.asarray(pivot_rank(z, pv, 10, interpret=True)),
+        np.asarray(ref.pivot_rank_ref(z, pv, 10))))
+    emit("kern/pivot_rank/pallas_interpret", 0.0, f"exact_match={same}")

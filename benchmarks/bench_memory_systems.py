@@ -1,0 +1,45 @@
+"""Table I analogue — CLIMBER vs in-memory exact search across sizes.
+
+Odyssey / ParlayANN themselves are not reproducible here (different
+codebases); the exact-scan jitted path plays the "in-memory exact" role the
+table uses them for: I.C.T (index construction), Q.R.T (query response),
+R.R (recall).  The qualitative claim under test is the paper's: CLIMBER
+trades a bounded recall loss for index-backed queries that touch a tiny
+fraction of the data, while exact in-memory search pays full scans.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import default_cfg, emit, timed
+from repro.baselines import exact_knn, recall
+from repro.core import build_index, knn_query
+from repro.data import make_dataset, make_queries
+
+K = 50
+
+
+def run() -> None:
+    for n in (8_000, 16_000, 32_000, 64_000):
+        data = make_dataset("randomwalk", jax.random.PRNGKey(0), n, 128)
+        queries = make_queries(jax.random.PRNGKey(1), data, 20)
+        _, exact_ids = exact_knn(queries, data, K)
+
+        # exact in-memory scan ("Odyssey role"): no index, full scan
+        (_, _), t_scan = timed(lambda: exact_knn(queries, data, K))
+        emit(f"table1/n{n}/exact-inmem", t_scan * 1e6, "recall=1.000;ict_us=0")
+
+        cfg = default_cfg(k=K)
+        t0 = time.perf_counter()
+        index = build_index(jax.random.PRNGKey(2), data, cfg)
+        ict = time.perf_counter() - t0
+        (_, gid, plan), t_q = timed(
+            lambda: knn_query(index, queries, K, variant="adaptive"))
+        r = recall(np.asarray(gid), np.asarray(exact_ids))
+        frac = (float(np.asarray(plan.partitions_touched()).mean())
+                * index.store.capacity / n)
+        emit(f"table1/n{n}/climber", t_q * 1e6,
+             f"recall={r:.3f};ict_us={ict*1e6:.0f};data_frac={frac:.3f}")

@@ -1,0 +1,47 @@
+"""Fig. 10 — impact of the number of pivots: build phases + accuracy."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+import repro.core.assignment as assignment
+import repro.core.centroids as centroids_mod
+import repro.core.pivots as pivots_mod
+import repro.core.signatures as sig_mod
+from benchmarks.common import climber_recall, default_cfg, emit, standard_setup
+from repro.core import build_index
+from repro.core.paa import paa
+
+
+def run() -> None:
+    data, queries, exact_ids = standard_setup("randomwalk", 12_000, k=50)
+
+    for r in (32, 64, 96, 160, 256):
+        cfg = default_cfg(num_pivots=r, k=50)
+        # phase timings (Fig 10a): skeleton vs conversion vs redistribution
+        t0 = time.perf_counter()
+        index = build_index(jax.random.PRNGKey(5), data, cfg)
+        t_total = time.perf_counter() - t0
+
+        # conversion-only timing (signature generation over the full set)
+        z = paa(data, cfg.paa_segments)
+        t0 = time.perf_counter()
+        p4 = sig_mod.rank_signature(z, index.pivots, cfg.prefix_len)
+        p4.block_until_ready()
+        t_convert = time.perf_counter() - t0
+
+        rec, t_q, _ = climber_recall(index, queries, exact_ids, 50)
+        emit(f"fig10/r{r}/build", t_total * 1e6,
+             f"convert_us={t_convert*1e6:.0f};recall={rec:.3f};"
+             f"groups={index.num_groups}")
+
+    # accuracy per dataset at the default r (Fig 10b)
+    for name in ("randomwalk", "sift", "dna", "eeg"):
+        data, queries, exact_ids = standard_setup(name, 12_000, k=50)
+        for r in (32, 96, 192):
+            cfg = default_cfg(num_pivots=r, k=50)
+            index = build_index(jax.random.PRNGKey(6), data, cfg)
+            rec, t_q, _ = climber_recall(index, queries, exact_ids, 50)
+            emit(f"fig10b/{name}/r{r}", t_q * 1e6, f"recall={rec:.3f}")

@@ -1,0 +1,39 @@
+"""Fig. 12 — prefix-length sweep: accuracy / index size / build / query time
+relative to the m=10 default."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import climber_recall, default_cfg, emit, standard_setup
+from repro.core import build_index
+
+
+def _skeleton_bytes(index) -> int:
+    f = index.forest
+    return int(sum(a.nbytes for a in (
+        f.child_start, f.edge_pivot, f.edge_child, f.edge_key, f.node_size,
+        f.dfs_in, f.dfs_out, f.part_start, f.part_ids))
+        + np.asarray(index.pivots).nbytes
+        + np.asarray(index.centroid_onehot).nbytes)
+
+
+def run() -> None:
+    data, queries, exact_ids = standard_setup("randomwalk", 16_000, k=50)
+    baseline = {}
+    for m in (10, 4, 6, 8, 12, 16):          # m=10 first: the reference
+        cfg = default_cfg(prefix_len=m, k=50)
+        t0 = time.perf_counter()
+        index = build_index(jax.random.PRNGKey(21), data, cfg)
+        t_build = time.perf_counter() - t0
+        rec, t_q, _ = climber_recall(index, queries, exact_ids, 50)
+        size = _skeleton_bytes(index)
+        if m == 10:
+            baseline = {"build": t_build, "q": t_q, "rec": rec, "size": size}
+        rel = (f"rel_build={t_build/baseline['build']:.2f};"
+               f"rel_query={t_q/baseline['q']:.2f};"
+               f"rel_size={size/baseline['size']:.2f};"
+               f"recall={rec:.3f}")
+        emit(f"fig12/m{m}", t_q * 1e6, rel)

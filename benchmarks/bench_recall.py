@@ -1,0 +1,53 @@
+"""Fig. 7 — query execution: time + recall vs Dss / DPiSAX / TARDIS.
+
+(a)/(b): four datasets at fixed size; (c)/(d): RandomWalk size sweep.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (climber_recall, default_cfg, emit,
+                               standard_setup, timed)
+from repro.baselines import (build_dpisax, build_tardis, dpisax_knn,
+                             exact_knn, recall, tardis_knn)
+from repro.core import build_index
+from repro.data import make_dataset, make_queries
+
+K = 50
+
+
+def _one_dataset(name: str, n: int, tag: str) -> None:
+    data, queries, exact_ids = standard_setup(name, n, k=K)
+    cfg = default_cfg(k=K)
+
+    # Dss (exact, the ground truth generator) — time only, recall = 1
+    (_, _), t_dss = timed(lambda: exact_knn(queries, data, K))
+    emit(f"fig7/{tag}/dss", t_dss * 1e6, "recall=1.000")
+
+    index = build_index(jax.random.PRNGKey(7), data, cfg)
+    r, secs, touched = climber_recall(index, queries, exact_ids, K)
+    emit(f"fig7/{tag}/climber", secs * 1e6,
+         f"recall={r:.3f};parts={touched:.1f}")
+
+    dp = build_dpisax(data, segments=cfg.paa_segments, cardinality=8,
+                      capacity=cfg.capacity)
+    (_, gid_d), t_d = timed(lambda: dpisax_knn(dp, queries, K))
+    emit(f"fig7/{tag}/dpisax", t_d * 1e6,
+         f"recall={recall(np.asarray(gid_d), np.asarray(exact_ids)):.3f}")
+
+    td = build_tardis(jax.random.PRNGKey(8), data, segments=cfg.paa_segments,
+                      cardinality=8, capacity=cfg.capacity,
+                      sample_frac=cfg.sample_frac)
+    (_, gid_t), t_t = timed(lambda: tardis_knn(td, queries, K))
+    emit(f"fig7/{tag}/tardis", t_t * 1e6,
+         f"recall={recall(np.asarray(gid_t), np.asarray(exact_ids)):.3f}")
+
+
+def run() -> None:
+    # (a)/(b): four domains (the paper's RandomWalk/Texmex/DNA/EEG analogues)
+    for name in ("randomwalk", "sift", "dna", "eeg"):
+        _one_dataset(name, 12_000, name)
+    # (c)/(d): size sweep on RandomWalk
+    for n in (4_000, 8_000, 16_000, 32_000):
+        _one_dataset("randomwalk", n, f"size{n}")

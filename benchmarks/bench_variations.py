@@ -1,0 +1,55 @@
+"""Fig. 11 — CLIMBER variations: adaptive gain when K exceeds node capacity
+(11a) and the OD-Smallest data-touched/recall trade-off (11b)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import default_cfg, emit, standard_setup, timed
+from repro.baselines import exact_knn, recall
+from repro.core import build_index, knn_query
+
+
+def run() -> None:
+    data, queries, _ = standard_setup("randomwalk", 16_000, k=50)
+
+    # 11a: stress K beyond the landing node's capacity
+    for k in (50, 200, 400):
+        _, exact_ids = exact_knn(queries, data, k)
+        base_cfg = default_cfg(k=k, adaptive_factor=1)
+        index = build_index(jax.random.PRNGKey(11), data, base_cfg)
+        (_, gid_b, plan_b), t_b = timed(
+            lambda: knn_query(index, queries, k, variant="knn"))
+        r_base = recall(np.asarray(gid_b), np.asarray(exact_ids))
+        for factor in (2, 4):
+            cfg = default_cfg(k=k, adaptive_factor=factor)
+            idx2 = build_index(jax.random.PRNGKey(11), data, cfg)
+            (_, gid_a, plan_a), t_a = timed(
+                lambda: knn_query(idx2, queries, k, variant="adaptive"))
+            r_a = recall(np.asarray(gid_a), np.asarray(exact_ids))
+            gain = (r_a - r_base) / max(r_base, 1e-9) * 100
+            emit(f"fig11a/k{k}/adaptive{factor}x", t_a * 1e6,
+                 f"recall={r_a:.3f};base={r_base:.3f};gain_pct={gain:.1f}")
+
+    # 11b: OD-Smallest vs the three variants — relative data accessed
+    k = 100
+    _, exact_ids = exact_knn(queries, data, k)
+    results = {}
+    for variant, factor in (("knn", 1), ("adaptive", 2), ("adaptive", 4),
+                            ("od_smallest", 4)):
+        cfg = default_cfg(k=k, adaptive_factor=factor)
+        index = build_index(jax.random.PRNGKey(12), data, cfg)
+        tag = variant if variant != "adaptive" else f"adaptive{factor}x"
+        (_, gid, plan), secs = timed(
+            lambda: knn_query(index, queries, k, variant=variant))
+        r = recall(np.asarray(gid), np.asarray(exact_ids))
+        touched = float(np.asarray(plan.partitions_touched()).mean())
+        results[tag] = (r, touched)
+        emit(f"fig11b/{tag}", secs * 1e6,
+             f"recall={r:.3f};parts={touched:.2f}")
+    od_r, od_t = results["od_smallest"]
+    for tag in ("knn", "adaptive2x", "adaptive4x"):
+        r, t = results[tag]
+        emit(f"fig11b/ratio/{tag}", 0.0,
+             f"od_recall_ratio={od_r/max(r,1e-9):.2f};"
+             f"od_data_ratio={od_t/max(t,1e-9):.2f}")

@@ -1,0 +1,66 @@
+"""Shared benchmark harness.
+
+Every benchmark emits ``name,us_per_call,derived`` CSV rows (one per paper
+table/figure cell).  Recall numbers are real measurements on synthetic
+datasets matching the paper's generators; wall times are CPU times at
+reduced N (the TB-scale wall-times are out of scope per DESIGN.md — the
+dry-run/roofline pipeline covers scalability).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.baselines import exact_knn, recall
+from repro.core import build_index, knn_query
+from repro.data import make_dataset, make_queries
+from repro.utils.config import ClimberConfig
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """(result, seconds) with a warmup call (jit compilation excluded)."""
+    result = fn(*args, **kw)
+    jax.block_until_ready(jax.tree_util.tree_leaves(result)[0]) \
+        if jax.tree_util.tree_leaves(result) else None
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        result = fn(*args, **kw)
+        leaves = jax.tree_util.tree_leaves(result)
+        if leaves:
+            jax.block_until_ready(leaves[0])
+    return result, (time.perf_counter() - t0) / repeats
+
+
+def default_cfg(**kw) -> ClimberConfig:
+    base = dict(series_len=128, paa_segments=16, num_pivots=96, prefix_len=10,
+                capacity=256, sample_frac=0.15, max_centroids=48, k=50,
+                candidate_groups=8, adaptive_factor=4)
+    base.update(kw)
+    return ClimberConfig(**base)
+
+
+def standard_setup(dataset: str = "randomwalk", n: int = 12_000,
+                   num_queries: int = 20, k: int = 50, seed: int = 0,
+                   series_len: int = 128):
+    data = make_dataset(dataset, jax.random.PRNGKey(seed), n, series_len)
+    queries = make_queries(jax.random.PRNGKey(seed + 1), data, num_queries)
+    _, exact_ids = exact_knn(queries, data, k)
+    return data, queries, exact_ids
+
+
+def climber_recall(index, queries, exact_ids, k: int, variant="adaptive"):
+    (dist, gid, plan), secs = timed(
+        lambda: knn_query(index, queries, k, variant=variant))
+    r = recall(np.asarray(gid), np.asarray(exact_ids))
+    touched = float(np.asarray(plan.partitions_touched()).mean())
+    return r, secs, touched

@@ -1,0 +1,34 @@
+"""§Roofline table generator — reads the dry-run artifacts and prints the
+three-term analysis per (arch × shape) on the single-pod mesh."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run() -> None:
+    if not ART.exists():
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    rows = []
+    for f in sorted(ART.glob("*_16x16.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") == "skipped":
+            emit(f"roofline/{d['arch']}/{d['shape']}", 0.0,
+                 "status=skipped(long-context-rule)")
+            continue
+        if d.get("status") != "ok":
+            emit(f"roofline/{d['arch']}/{d['shape']}", 0.0, "status=error")
+            continue
+        emit(f"roofline/{d['arch']}/{d['shape']}",
+             d["bound_s"] * 1e6 if "bound_s" in d else
+             max(d["compute_s"], d["memory_s"], d["collective_s"]) * 1e6,
+             f"compute_s={d['compute_s']:.4f};memory_s={d['memory_s']:.4f};"
+             f"collective_s={d['collective_s']:.4f};"
+             f"bottleneck={d['bottleneck']};"
+             f"useful={d['useful_flops_ratio']:.2f};"
+             f"roofline_frac={d['roofline_fraction']:.3f}")

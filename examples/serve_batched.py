@@ -1,0 +1,49 @@
+"""Batched serving example: continuous prefill+decode over request slots.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch zamba2-2.7b]
+
+Drives the vLLM-shaped engine (repro.serve.engine) with a smoke-config model:
+8 requests through 4 slots, one decode tick for all live slots per step.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serve import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, slots=4, max_len=64)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for rid in range(args.requests):
+        req = Request(rid=rid,
+                      prompt=rng.integers(0, cfg.vocab_size,
+                                          rng.integers(4, 12),
+                                          dtype=np.int32),
+                      max_new_tokens=12)
+        reqs.append(req)
+        engine.submit(req)
+
+    engine.run_until_drained(max_ticks=400)
+    for req in reqs:
+        assert req.done and len(req.generated) >= 12
+        print(f"req {req.rid}: prompt_len={len(req.prompt)} "
+              f"generated={req.generated[:8]}...")
+    print("OK — all requests served")
+
+
+if __name__ == "__main__":
+    main()

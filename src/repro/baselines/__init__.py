@@ -1,0 +1,8 @@
+from repro.baselines.dss import exact_knn, exact_knn_sharded, recall
+from repro.baselines.isax import sax_word, sax_breakpoints, isax_bits
+from repro.baselines.dpisax import DPiSAXIndex, build_dpisax, dpisax_knn
+from repro.baselines.tardis import TardisIndex, build_tardis, tardis_knn
+
+__all__ = ["exact_knn", "exact_knn_sharded", "recall", "sax_word",
+           "sax_breakpoints", "isax_bits", "DPiSAXIndex", "build_dpisax",
+           "dpisax_knn", "TardisIndex", "build_tardis", "tardis_knn"]

@@ -1,0 +1,43 @@
+"""SAX / iSAX representation (paper §III-B, Fig. 1) — baseline substrate.
+
+SAX divides the value axis into ``cardinality`` stripes whose boundaries are
+standard-normal quantiles (Lin et al. [39]) and assigns each PAA segment the
+stripe containing its mean.  Both baseline indexes (DPiSAX, TARDIS) operate
+on these lossy words — reproducing the two-level information loss the paper
+identifies as the root cause of their low recall.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+from repro.core.paa import paa
+
+
+def sax_breakpoints(cardinality: int) -> jnp.ndarray:
+    """Stripe boundaries: N(0,1) quantiles at i/card, i = 1..card-1."""
+    probs = jnp.arange(1, cardinality, dtype=jnp.float32) / cardinality
+    return ndtri(probs)
+
+
+def sax_word(x: jnp.ndarray, segments: int, cardinality: int) -> jnp.ndarray:
+    """SAX transform: raw ``[..., n]`` → symbol word ``[..., w]`` int32.
+
+    Symbols are stripe indices in [0, cardinality); all segments share the
+    same cardinality (the iSAX variable-cardinality refinement is applied by
+    the indexes through bit prefixes of these symbols).
+    """
+    z = paa(x, segments)
+    bp = sax_breakpoints(cardinality)
+    return jnp.searchsorted(bp, z).astype(jnp.int32)
+
+
+def isax_bits(word: jnp.ndarray, bits: int, cardinality: int) -> jnp.ndarray:
+    """Keep only the ``bits`` most-significant bits of each symbol.
+
+    This is iSAX's prefix maintenance (Fig. 1b): lower cardinality = shorter
+    binary prefix of the same symbol.
+    """
+    full_bits = int(cardinality).bit_length() - 1
+    return (word >> (full_bits - bits)).astype(jnp.int32)

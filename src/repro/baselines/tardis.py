@@ -1,0 +1,74 @@
+"""TARDIS-like baseline (Zhang et al. [67]) — sigTree over iSAX words.
+
+TARDIS builds a wide n-ary tree (sigTree) over full iSAX words — level d
+branches on segment d's symbol — splits nodes over capacity, and clusters
+subtrees into physical partitions.  A query descends to its deepest matching
+node and scans that node's partition(s).
+
+We express the sigTree with the same flattened-trie machinery CLIMBER uses
+(``repro.core.trie`` with alphabet = SAX cardinality instead of pivot ids):
+the *only* delta between this baseline and CLIMBER is the representation
+(lossy iSAX symbols vs the dual P⁴ pivot signatures + OD/WD group level),
+which isolates exactly the paper's contribution in the benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.isax import sax_word
+from repro.core.index import PartitionStore, build_store
+from repro.core.refine import refine
+from repro.core.traversal import TrieDevice, descend, route_records
+from repro.core.trie import TrieForest, build_forest
+
+
+@dataclass
+class TardisIndex:
+    segments: int
+    cardinality: int
+    forest: TrieForest
+    trie: TrieDevice
+    store: PartitionStore
+
+
+def build_tardis(key: jax.Array, data: jnp.ndarray, *, segments: int = 16,
+                 cardinality: int = 8, capacity: int = 3000,
+                 sample_frac: float = 0.1) -> TardisIndex:
+    n_rec = data.shape[0]
+    sample_size = max(int(n_rec * sample_frac), min(n_rec, 256))
+    alpha_eff = sample_size / n_rec
+    idx = jax.random.choice(key, n_rec, shape=(sample_size,), replace=False)
+
+    words_s = np.asarray(sax_word(data[idx], segments, cardinality))
+    uniq, counts = np.unique(words_s, axis=0, return_counts=True)
+    forest = build_forest(uniq.astype(np.int32), counts,
+                          np.zeros(len(uniq), dtype=np.int32), 1, cardinality,
+                          capacity=float(capacity), sample_frac=alpha_eff)
+    trie = TrieDevice.from_forest(forest)
+
+    words = sax_word(data, segments, cardinality)
+    grp = jnp.zeros(n_rec, dtype=jnp.int32)
+    part, rec_dfs = route_records(trie, words, grp)
+    store = build_store(data, np.asarray(part), np.asarray(rec_dfs),
+                        forest.num_partitions)
+    return TardisIndex(segments=segments, cardinality=cardinality,
+                       forest=forest, trie=trie, store=store)
+
+
+def tardis_knn(index: TardisIndex, queries: jnp.ndarray, k: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Deepest-node single-target query (the sigTree search model)."""
+    words = sax_word(queries, index.segments, index.cardinality)
+    grp = jnp.zeros(queries.shape[0], dtype=jnp.int32)
+    node, pathlen, _ = descend(index.trie, words, grp)
+    sel_part = index.trie.part_ids_pad[node]                     # [Q, maxP]
+    ones = jnp.ones_like(sel_part)
+    sel_lo = index.trie.dfs_in[node][:, None] * ones
+    sel_hi = index.trie.dfs_out[node][:, None] * ones
+    return refine(index.store, queries, sel_part,
+                  sel_lo.astype(jnp.int32), sel_hi.astype(jnp.int32), k)

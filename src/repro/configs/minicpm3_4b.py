@@ -1,0 +1,19 @@
+"""minicpm3-4b [dense/MLA]: 62L d=2560 40H ff=6400 vocab=73448.
+Multi-head Latent Attention [hf:openbmb/MiniCPM3-4B; hf]."""
+from repro.utils.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-4b", family="dense", num_layers=62, d_model=2560,
+        num_heads=40, num_kv_heads=40, d_ff=6400, vocab_size=73448,
+        head_dim=96, use_mla=True, q_lora_rank=768, kv_lora_rank=256,
+        qk_nope_head_dim=64, qk_rope_head_dim=32, v_head_dim=64)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-4b-smoke", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256, head_dim=24,
+        use_mla=True, q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+        qk_rope_head_dim=8, v_head_dim=16)

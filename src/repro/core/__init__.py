@@ -1,0 +1,31 @@
+"""CLIMBER core — the paper's contribution as composable JAX modules."""
+from repro.core.paa import paa, znormalize
+from repro.core.pivots import select_pivots
+from repro.core.signatures import (compute_signatures, rank_signature,
+                                   set_signature, set_onehot, decay_weights,
+                                   weighted_onehot, pivot_distances)
+from repro.core.distances import (euclidean, squared_l2_pairwise,
+                                  overlap_distance, weight_distance,
+                                  total_weight)
+from repro.core.centroids import compute_centroids, CentroidSet
+from repro.core.assignment import assign_groups, assignment_distances
+from repro.core.trie import build_forest, TrieForest
+from repro.core.packing import ffd_pack
+from repro.core.traversal import TrieDevice, descend, route_records
+from repro.core.index import ClimberIndex, PartitionStore, build_index, build_store
+from repro.core.query import (QueryPlan, knn_query, plan_knn, plan_adaptive,
+                              plan_od_smallest)
+from repro.core.refine import refine, refine_sharded, merge_topk
+
+__all__ = [
+    "paa", "znormalize", "select_pivots", "compute_signatures",
+    "rank_signature", "set_signature", "set_onehot", "decay_weights",
+    "weighted_onehot", "pivot_distances", "euclidean", "squared_l2_pairwise",
+    "overlap_distance", "weight_distance", "total_weight",
+    "compute_centroids", "CentroidSet", "assign_groups",
+    "assignment_distances", "build_forest", "TrieForest", "ffd_pack",
+    "TrieDevice", "descend", "route_records", "ClimberIndex",
+    "PartitionStore", "build_index", "build_store", "QueryPlan", "knn_query",
+    "plan_knn", "plan_adaptive", "plan_od_smallest", "refine",
+    "refine_sharded", "merge_topk",
+]

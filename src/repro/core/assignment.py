@@ -1,0 +1,95 @@
+"""Group assignment rules — paper Algorithm 1 (§IV-C), fully vectorised.
+
+Decision ladder for each object X:
+  1. all OD distances == m (no pivot overlap with any centroid)  → group 0;
+  2. unique smallest OD                                          → that group;
+  3. tie → smallest WD (Def. 11) among the OD-tied centroids     → that group;
+  4. second tie → deterministic lowest-id selection (the paper picks
+     randomly among equally-good groups; we default to the lowest group id
+     for reproducibility and provide a seeded random variant).
+
+Everything is one-hot linear algebra: OD and WD against all centroids are two
+matmuls, so assignment of a billion objects is embarrassingly data-parallel.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as D
+from repro.core import signatures as S
+
+_BIG = jnp.float32(1e9)
+
+
+def assign_groups(
+    p4_rank: jnp.ndarray,
+    centroid_onehot: jnp.ndarray,
+    num_pivots: int,
+    *,
+    decay: str = "exp",
+    decay_lambda: float = 0.5,
+    tie_key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """Assign every object to a group id.
+
+    Args:
+      p4_rank: ``[N, m]`` rank-sensitive signatures.
+      centroid_onehot: ``[G, r]`` centroid bitsets, row 0 = fall-back (zeros).
+      num_pivots: r.
+      tie_key: optional PRNG key for the paper's random second-tie break.
+
+    Returns:
+      ``[N]`` int32 group ids in [0, G).
+    """
+    m = p4_rank.shape[-1]
+    x_oh = S.set_onehot(p4_rank, num_pivots)                   # [N, r]
+    od = D.overlap_distance(x_oh, centroid_onehot, m)          # [N, G]
+
+    # Row 0 is the fall-back: its OD is always m; exclude it from the min.
+    od_real = od.at[:, 0].set(_BIG)
+    min_od = jnp.min(od_real, axis=-1, keepdims=True)          # [N, 1]
+    no_overlap = jnp.min(od_real, axis=-1) >= m                # [N] → group 0
+
+    tie = od_real <= min_od + 0.5                              # OD is integral
+
+    # WD tie-break (lines 9-12): weights from the rank-sensitive signature.
+    w = S.decay_weights(m, decay, decay_lambda)
+    x_w = S.weighted_onehot(p4_rank, num_pivots, w)            # [N, r]
+    wd = D.weight_distance(x_w, centroid_onehot, D.total_weight(w))
+    wd_masked = jnp.where(tie, wd, _BIG)
+    min_wd = jnp.min(wd_masked, axis=-1, keepdims=True)
+    tie2 = wd_masked <= min_wd + 1e-6                          # [N, G]
+
+    if tie_key is None:
+        # deterministic: lowest group id among the final tie set
+        group = jnp.argmax(tie2, axis=-1)
+    else:
+        # paper-faithful random selection among the final tie set
+        gumbel = jax.random.gumbel(tie_key, tie2.shape)
+        group = jnp.argmax(jnp.where(tie2, gumbel, -_BIG), axis=-1)
+
+    return jnp.where(no_overlap, 0, group).astype(jnp.int32)
+
+
+def assignment_distances(
+    p4_rank: jnp.ndarray,
+    centroid_onehot: jnp.ndarray,
+    num_pivots: int,
+    *,
+    decay: str = "exp",
+    decay_lambda: float = 0.5,
+):
+    """Return (od, wd) against all centroids — used by the query planner.
+
+    od, wd: ``[N, G]`` with the fall-back column 0 set to +inf-like values.
+    """
+    m = p4_rank.shape[-1]
+    x_oh = S.set_onehot(p4_rank, num_pivots)
+    od = D.overlap_distance(x_oh, centroid_onehot, m).at[:, 0].set(_BIG)
+    w = S.decay_weights(m, decay, decay_lambda)
+    x_w = S.weighted_onehot(p4_rank, num_pivots, w)
+    wd = D.weight_distance(x_w, centroid_onehot, D.total_weight(w)).at[:, 0].set(_BIG)
+    return od, wd

@@ -1,0 +1,175 @@
+"""CLIMBER-INX — index construction workflow (paper §V, Fig. 6).
+
+Four steps, exactly as the paper stages them:
+  1. sample → PAA → random pivots → rank-sensitive signatures;
+  2. aggregate rank-insensitive signatures → group centroids (Algorithm 2);
+  3. assign sample to groups → per-group tries → FFD leaf packing → skeleton;
+  4. full-dataset pass: signatures → group (Algorithm 1) → trie routing →
+     physical partitions.
+
+Steps 1–3 run on the host over the sample (the paper runs them on the Spark
+driver).  Step 4 is the heavy distributed pass and is pure jitted JAX: on a
+mesh it shards over the batch ("data") axis with no sequential dependencies.
+
+The physical store is the TPU adaptation of HDFS blocks: a dense
+``[P, cap, n]`` array with validity masks (static shapes).  Records carry
+their trie-node DFS tag so that record↔node attribution at query time is an
+interval test (the paper's contiguous node clusters + header offsets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assignment
+from repro.core import centroids as centroids_mod
+from repro.core import pivots as pivots_mod
+from repro.core import signatures as sig_mod
+from repro.core.paa import paa as _paa
+from repro.core.traversal import TrieDevice, descend, route_records
+from repro.core.trie import TrieForest, build_forest
+from repro.utils.config import ClimberConfig
+
+
+class PartitionStore(NamedTuple):
+    """Physical partitions: the TPU analogue of the paper's HDFS blocks."""
+
+    data: jnp.ndarray      # [P, cap, n] raw series (for exact ED refine)
+    norms: jnp.ndarray     # [P, cap]    precomputed |x|^2
+    rec_dfs: jnp.ndarray   # [P, cap]    dfs_in of the record's trie node
+    rec_gid: jnp.ndarray   # [P, cap]    original dataset row id (-1 = pad)
+    count: jnp.ndarray     # [P]         live records per partition
+
+    @property
+    def num_partitions(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[1]
+
+
+@dataclass
+class ClimberIndex:
+    """The complete index: skeleton (replicated) + store (sharded)."""
+
+    cfg: ClimberConfig
+    pivots: jnp.ndarray            # [r, w]
+    centroid_onehot: jnp.ndarray   # [G, r], row 0 = fall-back
+    forest: TrieForest             # host skeleton (numpy)
+    trie: TrieDevice               # device skeleton (replicated)
+    store: PartitionStore
+
+    @property
+    def num_groups(self) -> int:
+        return self.centroid_onehot.shape[0]
+
+    # -- feature extraction for any batch of raw series -------------------
+    def featurize(self, series: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """raw ``[..., n]`` → (p4_rank ``[..., m]``, paa ``[..., w]``)."""
+        z = _paa(series, self.cfg.paa_segments)
+        p4r = sig_mod.rank_signature(z, self.pivots, self.cfg.prefix_len)
+        return p4r, z
+
+
+def _route_full_dataset(data: jnp.ndarray, pivots: jnp.ndarray,
+                        centroid_onehot: jnp.ndarray, trie: TrieDevice,
+                        cfg: ClimberConfig):
+    """Step 4 (jitted): signatures → groups → partitions for every record."""
+    z = _paa(data, cfg.paa_segments)
+    p4r = sig_mod.rank_signature(z, pivots, cfg.prefix_len)
+    grp = assignment.assign_groups(
+        p4r, centroid_onehot, cfg.num_pivots,
+        decay=cfg.decay, decay_lambda=cfg.decay_lambda)
+    part, rec_dfs = route_records(trie, p4r, grp)
+    return part, rec_dfs
+
+
+_route_full_dataset_jit = jax.jit(_route_full_dataset, static_argnames=("cfg",))
+
+
+def build_store(data: jnp.ndarray, part: np.ndarray, rec_dfs: np.ndarray,
+                num_partitions: int, pad: Optional[int] = None) -> PartitionStore:
+    """Scatter records into the fixed-capacity partition array."""
+    n_rec = data.shape[0]
+    part = np.asarray(part)
+    rec_dfs_np = np.asarray(rec_dfs)
+    counts = np.bincount(part, minlength=num_partitions)
+    cap = int(counts.max()) if pad is None else int(max(pad, counts.max()))
+    cap = max(cap, 1)
+
+    order = np.argsort(part, kind="stable")
+    part_sorted = part[order]
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = np.arange(n_rec) - starts[part_sorted]
+
+    series_len = data.shape[1]
+    store_data = np.zeros((num_partitions, cap, series_len), dtype=np.float32)
+    store_dfs = np.full((num_partitions, cap), -1, dtype=np.int32)
+    store_gid = np.full((num_partitions, cap), -1, dtype=np.int32)
+    data_np = np.asarray(data, dtype=np.float32)
+    store_data[part_sorted, slot] = data_np[order]
+    store_dfs[part_sorted, slot] = rec_dfs_np[order]
+    store_gid[part_sorted, slot] = order
+
+    norms = np.sum(store_data.astype(np.float64) ** 2, axis=-1).astype(np.float32)
+    return PartitionStore(
+        data=jnp.asarray(store_data),
+        norms=jnp.asarray(norms),
+        rec_dfs=jnp.asarray(store_dfs),
+        rec_gid=jnp.asarray(store_gid),
+        count=jnp.asarray(counts.astype(np.int32)),
+    )
+
+
+def build_index(key: jax.Array, data: jnp.ndarray, cfg: ClimberConfig,
+                *, pivot_method: str = "random") -> ClimberIndex:
+    """End-to-end CLIMBER-INX construction (Fig. 6)."""
+    n_rec, series_len = data.shape
+    if series_len != cfg.series_len:
+        raise ValueError(f"data series_len {series_len} != cfg {cfg.series_len}")
+    k_sample, k_pivot, k_tie = jax.random.split(key, 3)
+
+    # ---- Step 1: sample, PAA, pivots, signatures ------------------------
+    sample_size = int(np.clip(int(n_rec * cfg.sample_frac),
+                              min(n_rec, max(4 * cfg.num_pivots, 256)), n_rec))
+    alpha_eff = sample_size / n_rec
+    sample_idx = jax.random.choice(k_sample, n_rec, shape=(sample_size,),
+                                   replace=False)
+    sample_paa = _paa(data[sample_idx], cfg.paa_segments)
+    pivots = pivots_mod.select_pivots(k_pivot, sample_paa, cfg.num_pivots,
+                                      method=pivot_method)
+    p4r_s, p4s_s = sig_mod.compute_signatures(sample_paa, pivots, cfg.prefix_len)
+
+    # ---- Step 2: centroids (host, Algorithm 2) --------------------------
+    cents = centroids_mod.compute_centroids(
+        np.asarray(p4s_s), cfg.num_pivots,
+        sample_frac=alpha_eff, capacity=cfg.capacity,
+        min_od=cfg.centroid_min_od, max_centroids=cfg.max_centroids)
+    c_onehot = jnp.asarray(cents.onehot)
+
+    # ---- Step 3: sample groups → tries → packing (host) -----------------
+    # Aggregate rank-sensitive signatures by exact match (paper: [(P4→, freq)]).
+    p4r_np = np.asarray(p4r_s)
+    uniq, inverse, counts = np.unique(p4r_np, axis=0, return_inverse=True,
+                                      return_counts=True)
+    grp_s = assignment.assign_groups(
+        jnp.asarray(uniq), c_onehot, cfg.num_pivots,
+        decay=cfg.decay, decay_lambda=cfg.decay_lambda)
+    forest = build_forest(uniq, counts, np.asarray(grp_s),
+                          cents.num_groups, cfg.num_pivots,
+                          capacity=float(cfg.capacity), sample_frac=alpha_eff)
+    trie_dev = TrieDevice.from_forest(forest)
+
+    # ---- Step 4: full-dataset routing + physical store -------------------
+    part, rec_dfs = _route_full_dataset_jit(data, pivots, c_onehot, trie_dev, cfg)
+    store = build_store(data, np.asarray(part), np.asarray(rec_dfs),
+                        forest.num_partitions, pad=cfg.partition_pad)
+
+    return ClimberIndex(cfg=cfg, pivots=pivots, centroid_onehot=c_onehot,
+                        forest=forest, trie=trie_dev, store=store)

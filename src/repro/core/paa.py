@@ -1,0 +1,35 @@
+"""Piecewise Aggregate Approximation (PAA) — paper §IV-B Step 1.
+
+PAA divides a length-n series into w equal segments and represents each
+segment by its mean (Keogh et al. [35]).  This is the dimensionality-reduction
+front of CLIMBER-FX.  The jnp implementation below is the reference path; the
+Pallas kernel lives in ``repro.kernels.paa`` and is numerically identical.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paa(x: jnp.ndarray, segments: int) -> jnp.ndarray:
+    """PAA transform.
+
+    Args:
+      x: ``[..., n]`` raw data series (n divisible by ``segments``).
+      segments: w — the PAA word length.
+
+    Returns:
+      ``[..., w]`` segment means, same dtype as ``x`` promoted to float.
+    """
+    n = x.shape[-1]
+    if n % segments != 0:
+        raise ValueError(f"series length {n} not divisible by w={segments}")
+    seg = n // segments
+    x = x.reshape(x.shape[:-1] + (segments, seg))
+    return jnp.mean(x, axis=-1)
+
+
+def znormalize(x: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """Z-normalise each series (standard preprocessing for data-series search)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    sd = jnp.std(x, axis=-1, keepdims=True)
+    return (x - mu) / (sd + eps)

@@ -1,0 +1,60 @@
+"""Pivot selection — paper §V Step 1.
+
+The paper uses *random* pivot selection from the PAA'd sample ("random
+selection works competitively well compared to any other sophisticated
+selection methods" citing [24], [29], [44], [45], [59]).  We implement that
+as the faithful default and additionally provide farthest-point (max-min)
+selection as a beyond-paper option used in §Perf experiments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def select_pivots_random(key: jax.Array, paa_data: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Uniformly sample ``r`` distinct rows of ``paa_data`` as pivots.
+
+    Args:
+      key: PRNG key.
+      paa_data: ``[N, w]`` PAA signatures of the sample.
+      r: number of pivots.
+
+    Returns:
+      ``[r, w]`` pivot matrix (fixed for the lifetime of the index).
+    """
+    n = paa_data.shape[0]
+    if r > n:
+        raise ValueError(f"cannot select r={r} pivots from {n} samples")
+    idx = jax.random.choice(key, n, shape=(r,), replace=False)
+    return paa_data[idx]
+
+
+def select_pivots_maxmin(key: jax.Array, paa_data: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Farthest-point ("max-min") pivot selection.  Beyond-paper option.
+
+    Greedy k-center: start from a random point, repeatedly add the point
+    whose distance to the current pivot set is maximal.  O(r·N·w); runs on a
+    modest sample so this is cheap, and yields better-spread Voronoi cells.
+    """
+    n = paa_data.shape[0]
+    if r > n:
+        raise ValueError(f"cannot select r={r} pivots from {n} samples")
+    first = jax.random.randint(key, (), 0, n)
+    chosen = [first]
+    d2 = jnp.sum((paa_data - paa_data[first]) ** 2, axis=-1)
+    for _ in range(r - 1):
+        nxt = jnp.argmax(d2)
+        chosen.append(nxt)
+        d2 = jnp.minimum(d2, jnp.sum((paa_data - paa_data[nxt]) ** 2, axis=-1))
+    idx = jnp.stack(chosen)
+    return paa_data[idx]
+
+
+def select_pivots(key: jax.Array, paa_data: jnp.ndarray, r: int,
+                  method: str = "random") -> jnp.ndarray:
+    if method == "random":
+        return select_pivots_random(key, paa_data, r)
+    if method == "maxmin":
+        return select_pivots_maxmin(key, paa_data, r)
+    raise ValueError(f"unknown pivot selection method {method!r}")

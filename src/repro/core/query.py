@@ -1,0 +1,242 @@
+"""CLIMBER query processing — paper §VI (Algorithm 3 + the Adaptive variant).
+
+Planner outputs are static-shape selections so the whole query path jits:
+
+  * ``plan_knn``       — CLIMBER-kNN (Algorithm 3): one best trie node, the
+    partitions associated with it (Example 2 returns multiple partitions when
+    the landing node is internal).
+  * ``plan_adaptive``  — CLIMBER-kNN-Adaptive: memorises the top-T candidate
+    groups and, per group, the landing node and its parent (the longest and
+    2nd-longest best matches).  When the best node holds < K records it
+    expands down the memorised ranking until the cumulative size covers K,
+    capped at ``adaptive_factor`` × the partitions CLIMBER-kNN would touch
+    (the paper's 2X / 4X variants).
+  * ``plan_od_smallest`` — the §VII-C ablation: scan every partition of every
+    group at the minimal OD (stop at Algorithm 3 line 6).
+
+All ladders follow Algorithm 3's tie-breaks: OD → WD → PathLen (desc) →
+node size (desc) → deterministic lowest id (paper: random among equals).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import assignment
+from repro.core.refine import refine as _refine
+from repro.core.index import ClimberIndex
+from repro.core.traversal import descend
+
+_BIG = jnp.float32(1e9)
+
+
+class QueryPlan(NamedTuple):
+    """Static-shape partition/node targets for a batch of queries."""
+
+    sel_part: jnp.ndarray   # [Q, MP] partition ids, -1 padded
+    sel_lo: jnp.ndarray     # [Q, MP] dfs interval lo of targeting node
+    sel_hi: jnp.ndarray     # [Q, MP] dfs interval hi
+    node: jnp.ndarray       # [Q] the Algorithm-3 landing node (best group)
+    pathlen: jnp.ndarray    # [Q]
+
+    def partitions_touched(self) -> jnp.ndarray:
+        """#distinct partitions accessed per query (benchmark metric)."""
+        sp = jnp.sort(self.sel_part, axis=-1)
+        fresh = jnp.concatenate(
+            [sp[:, :1] >= 0,
+             (sp[:, 1:] != sp[:, :-1]) & (sp[:, 1:] >= 0)], axis=-1)
+        return jnp.sum(fresh, axis=-1)
+
+
+def _candidates(index: ClimberIndex, p4_rank_q: jnp.ndarray):
+    """Top-T candidate groups by the (OD, WD) ladder + their trie descent."""
+    cfg = index.cfg
+    t = min(cfg.candidate_groups, index.num_groups - 1) or 1
+    od, wd = assignment.assignment_distances(
+        p4_rank_q, index.centroid_onehot, cfg.num_pivots,
+        decay=cfg.decay, decay_lambda=cfg.decay_lambda)
+    # lexicographic (od, wd): od is integral in [0, m]; wd bounded by TW < m+1.
+    score = od * (cfg.prefix_len + 2.0) + wd
+    neg, grp = jax.lax.top_k(-score, t)                        # [Q, T]
+    cand_od = jnp.take_along_axis(od, grp, axis=-1)
+    cand_wd = jnp.take_along_axis(wd, grp, axis=-1)
+
+    node, pathlen, parent = descend(
+        index.trie, p4_rank_q[:, None, :].repeat(t, axis=1), grp)
+    size = index.trie.node_size[node]
+    return grp, cand_od, cand_wd, node, pathlen, parent, size
+
+
+def _rank_best(cand_od, cand_wd, pathlen, size, m: int):
+    """Algorithm 3 lines 5–19 as one composite key; returns argbest [Q]."""
+    # Groups not at the minimal OD are out; then minimal WD; then longest
+    # path; then largest node.  Encode as a single score to argmin.
+    min_od = jnp.min(cand_od, axis=-1, keepdims=True)
+    min_wd = jnp.min(jnp.where(cand_od <= min_od + 0.5, cand_wd, _BIG),
+                     axis=-1, keepdims=True)
+    eligible = (cand_od <= min_od + 0.5) & (cand_wd <= min_wd + 1e-6)
+    # among eligible: maximize (pathlen, size) → minimize negatives
+    key = jnp.where(eligible,
+                    -(pathlen.astype(jnp.float32) * 1e6 +
+                      jnp.minimum(size, 1e5)),
+                    _BIG)
+    return jnp.argmin(key, axis=-1)                             # [Q]
+
+
+def _node_targets(index: ClimberIndex, nodes: jnp.ndarray):
+    """Partitions + dfs intervals of a batch of nodes.  [..., maxP]."""
+    parts = index.trie.part_ids_pad[nodes]                      # [..., maxP]
+    lo = index.trie.dfs_in[nodes][..., None] * jnp.ones_like(parts)
+    hi = index.trie.dfs_out[nodes][..., None] * jnp.ones_like(parts)
+    return parts, lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+def plan_knn(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
+    """CLIMBER-kNN (Algorithm 3)."""
+    cfg = index.cfg
+    grp, od, wd, node, pathlen, parent, size = _candidates(index, p4_rank_q)
+    best = _rank_best(od, wd, pathlen, size, cfg.prefix_len)    # [Q]
+    q = p4_rank_q.shape[0]
+    rows = jnp.arange(q)
+    node_star = node[rows, best]
+    parts, lo, hi = _node_targets(index, node_star)
+    return QueryPlan(sel_part=parts, sel_lo=lo, sel_hi=hi,
+                     node=node_star, pathlen=pathlen[rows, best])
+
+
+def plan_adaptive(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
+    """CLIMBER-kNN-Adaptive (paper §VI)."""
+    cfg = index.cfg
+    grp, od, wd, node, pathlen, parent, size = _candidates(index, p4_rank_q)
+    best = _rank_best(od, wd, pathlen, size, cfg.prefix_len)
+    q, t = grp.shape
+    rows = jnp.arange(q)
+    node_star = node[rows, best]
+    pathlen_star = pathlen[rows, best]
+
+    # Memorised entries: per group the landing node then its parent.
+    ent_node = jnp.stack([node, parent], axis=-1).reshape(q, 2 * t)
+    ent_od = jnp.repeat(od, 2, axis=-1)
+    ent_wd = jnp.repeat(wd, 2, axis=-1)
+    ent_path = jnp.stack([pathlen, jnp.maximum(pathlen - 1, 0)],
+                         axis=-1).reshape(q, 2 * t)
+    ent_size = index.trie.node_size[ent_node]
+
+    # Quality order: (od, wd, -pathlen, -size); the winner ranks first by
+    # construction.  Drop duplicate nodes (parent == node at roots, or the
+    # same node reached from several ladders).
+    order_key = (ent_od * (cfg.prefix_len + 2.0) + ent_wd) * 1e6 \
+        - ent_path.astype(jnp.float32) * 1e3 \
+        - jnp.minimum(ent_size, 999.0)
+    # force the Algorithm-3 winner to rank strictly first
+    is_star = ent_node == node_star[:, None]
+    order_key = jnp.where(is_star, -_BIG, order_key)
+    order = jnp.argsort(order_key, axis=-1)
+    ent_node = jnp.take_along_axis(ent_node, order, axis=-1)
+    ent_size = jnp.take_along_axis(ent_size, order, axis=-1)
+
+    dup = jnp.cumsum(
+        (ent_node[:, :, None] == ent_node[:, None, :]).astype(jnp.int32),
+        axis=-1)
+    first_occurrence = jnp.take_along_axis(
+        dup, jnp.arange(2 * t)[None, :, None], axis=-1)[..., 0] == 1
+    ent_size = jnp.where(first_occurrence, ent_size, 0.0)
+
+    # Expansion rule (§VI): the adaptive algorithm memorises (a) all groups
+    # tied at the smallest OD distance and (b) per group the longest/2nd-
+    # longest matching nodes; it expands over them until the cumulative size
+    # covers K.  The MaxNumPartitions-style cap below keeps the data touched
+    # bounded at `adaptive_factor`× what CLIMBER-kNN reads.
+    ent_od_sorted = jnp.take_along_axis(ent_od, order, axis=-1)
+    min_od = jnp.min(ent_od_sorted, axis=-1, keepdims=True)
+    od_tied = ent_od_sorted <= min_od + 0.5
+    cum_before = jnp.cumsum(ent_size, axis=-1) - ent_size
+    need = cum_before < float(cfg.k)
+    selected = first_occurrence & (need | od_tied)
+    selected = selected.at[:, 0].set(True)
+
+    # Partition cap: adaptive_factor × the partitions CLIMBER-kNN touches.
+    star_parts = index.trie.part_ids_pad[node_star]             # [Q, maxP]
+    n_star_parts = jnp.sum(star_parts >= 0, axis=-1)
+    cap = n_star_parts * cfg.adaptive_factor                    # [Q]
+
+    parts, lo, hi = _node_targets(index, ent_node)              # [Q, 2T, maxP]
+    sel3 = selected[:, :, None] & (parts >= 0)
+    flat_parts = jnp.where(sel3, parts, -1).reshape(q, -1)
+    flat_lo = lo.reshape(q, -1)
+    flat_hi = hi.reshape(q, -1)
+    # enforce the cap in entry order (first-node partitions always survive)
+    live = flat_parts >= 0
+    idx_within = jnp.cumsum(live.astype(jnp.int32), axis=-1) - 1
+    keep = live & (idx_within < cap[:, None])
+    flat_parts = jnp.where(keep, flat_parts, -1)
+    return QueryPlan(sel_part=flat_parts, sel_lo=flat_lo, sel_hi=flat_hi,
+                     node=node_star, pathlen=pathlen_star)
+
+
+def plan_od_smallest(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
+    """OD-Smallest ablation (§VII-C): all partitions of all min-OD groups."""
+    cfg = index.cfg
+    grp, od, wd, node, pathlen, parent, size = _candidates(index, p4_rank_q)
+    min_od = jnp.min(od, axis=-1, keepdims=True)
+    sel_grp = od <= min_od + 0.5                                # [Q, T]
+    roots = index.trie.group_root[grp]                          # [Q, T]
+    parts, lo, hi = _node_targets(index, roots)                 # [Q, T, maxP]
+    q = grp.shape[0]
+    sel3 = sel_grp[:, :, None] & (parts >= 0)
+    flat_parts = jnp.where(sel3, parts, -1).reshape(q, -1)
+    best = _rank_best(od, wd, pathlen, size, cfg.prefix_len)
+    rows = jnp.arange(q)
+    return QueryPlan(sel_part=flat_parts,
+                     sel_lo=lo.reshape(q, -1), sel_hi=hi.reshape(q, -1),
+                     node=node[rows, best], pathlen=pathlen[rows, best])
+
+
+def compact_plan(plan: QueryPlan, max_slots: int) -> QueryPlan:
+    """Compress the plan's padded slot axis to ``max_slots``.
+
+    Beyond-paper optimisation: the refine gather costs Q×slots×cap×n bytes
+    regardless of how many slots are real; moving valid entries to the front
+    and slicing bounds the gather by the *actual* partition budget instead
+    of the static worst case (2T×maxP).  Entries beyond max_slots are
+    dropped — by construction the adaptive cap keeps the real entry count
+    below the budget, so this is lossless for the paper's defaults.
+    """
+    order = jnp.argsort((plan.sel_part < 0).astype(jnp.int32), axis=-1,
+                        stable=True)
+    take = lambda t: jnp.take_along_axis(t, order, axis=-1)[:, :max_slots]
+    return QueryPlan(sel_part=take(plan.sel_part), sel_lo=take(plan.sel_lo),
+                     sel_hi=take(plan.sel_hi), node=plan.node,
+                     pathlen=plan.pathlen)
+
+
+_PLANNERS = {
+    "knn": plan_knn,
+    "adaptive": plan_adaptive,
+    "od_smallest": plan_od_smallest,
+}
+
+
+def knn_query(index: ClimberIndex, queries: jnp.ndarray, k: int = 0,
+              *, variant: str = "adaptive", use_kernel: bool = False
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, QueryPlan]:
+    """End-to-end approximate kNN (feature extraction → plan → exact refine).
+
+    Args:
+      queries: ``[Q, n]`` raw query series.
+      k: answer size (defaults to cfg.k).
+      variant: "knn" | "adaptive" | "od_smallest".
+
+    Returns:
+      (dist, gid, plan): ``[Q, k]`` ED + original record ids (−1 pad).
+    """
+    k = k or index.cfg.k
+    p4r_q, _ = index.featurize(queries)
+    plan = _PLANNERS[variant](index, p4r_q)
+    dist, gid = _refine(index.store, queries, plan.sel_part,
+                                  plan.sel_lo, plan.sel_hi, k,
+                                  use_kernel=use_kernel)
+    return dist, gid, plan

@@ -1,0 +1,146 @@
+"""Localized record-level similarity — paper §VI (final refine stage).
+
+Given the partitions + trie-node targets selected by the planner, load the
+selected partitions, restrict to records belonging to the targeted trie
+node(s) (interval test on the DFS tag — the paper's contiguous node clusters),
+compute exact ED against the raw series, and rank for the final top-K.
+
+Two execution paths:
+  * ``refine``          — jnp path (oracle; default on CPU);
+  * ``repro.kernels.l2_topk`` — Pallas kernel for the distance hot loop
+    (invoked by passing ``use_kernel=True``; validated against this path).
+
+The distributed variant (``refine_sharded``) is a shard_map over the data
+axis: each device scans only its local partition shard, produces a local
+top-k, and a single all-gather + merge yields the global answer — the TPU
+analogue of the paper's scatter/gather over HDFS partitions.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.index import PartitionStore
+
+_INF = jnp.float32(3.4e38)
+
+
+def _masked_distances(store: PartitionStore, queries: jnp.ndarray,
+                      sel_part: jnp.ndarray, sel_lo: jnp.ndarray,
+                      sel_hi: jnp.ndarray, *, use_kernel: bool = False):
+    """Squared ED of each query against records of its selected partitions.
+
+    Args:
+      store: partition store (P partitions × cap slots).
+      queries: ``[Q, n]``.
+      sel_part: ``[Q, MP]`` partition ids (−1 = unused slot).
+      sel_lo / sel_hi: ``[Q, MP]`` DFS interval of the targeting trie node.
+
+    Returns:
+      (d2, gid): ``[Q, MP*cap]`` masked squared distances (masked = +inf) and
+      the corresponding original record ids.
+    """
+    q2 = jnp.sum(queries * queries, axis=-1)                    # [Q]
+    pid = jnp.maximum(sel_part, 0)                              # clamp pads
+    rows = store.data[pid]                                      # [Q, MP, cap, n]
+    rows2 = store.norms[pid]                                    # [Q, MP, cap]
+    rdfs = store.rec_dfs[pid]
+    rgid = store.rec_gid[pid]
+
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        dots = kernel_ops.batched_query_dots(queries, rows)     # [Q, MP, cap]
+    else:
+        dots = jnp.einsum("qn,qmcn->qmc", queries, rows)
+    d2 = jnp.maximum(q2[:, None, None] - 2.0 * dots + rows2, 0.0)
+
+    valid = rgid >= 0
+    in_node = (rdfs >= sel_lo[:, :, None]) & (rdfs < sel_hi[:, :, None])
+    incl = valid & in_node & (sel_part >= 0)[:, :, None]
+    # Dedupe: if two selected entries cover the same record (e.g. a node and
+    # its ancestor were both selected), count it at the first entry only.
+    # Key on (partition id, slot): identical across duplicate entries.
+    same_pid = pid[:, :, None] == pid[:, None, :]               # [Q, MP, MP]
+    earlier = jnp.tril(jnp.ones(same_pid.shape[-2:], bool), k=-1)
+    # record included by an earlier entry of the same partition?
+    incl_earlier = jnp.einsum("qec,qme->qmc",
+                              incl.astype(jnp.float32),
+                              (same_pid & earlier).astype(jnp.float32)) > 0
+    incl = incl & ~incl_earlier
+
+    q = queries.shape[0]
+    d2 = jnp.where(incl, d2, _INF).reshape(q, -1)
+    gid = jnp.where(incl, rgid, -1).reshape(q, -1)
+    return d2, gid
+
+
+def refine(store: PartitionStore, queries: jnp.ndarray, sel_part: jnp.ndarray,
+           sel_lo: jnp.ndarray, sel_hi: jnp.ndarray, k: int,
+           *, use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact-ED top-k within the selected (partition, node) targets.
+
+    Returns:
+      (dist, gid): ``[Q, k]`` ascending ED (not squared) and record ids
+      (−1 where fewer than k candidates existed).
+    """
+    d2, gid = _masked_distances(store, queries, sel_part, sel_lo, sel_hi,
+                                use_kernel=use_kernel)
+    neg, idx = jax.lax.top_k(-d2, k)
+    top_gid = jnp.take_along_axis(gid, idx, axis=-1)
+    dist = jnp.sqrt(jnp.maximum(-neg, 0.0))
+    top_gid = jnp.where(-neg >= _INF, -1, top_gid)
+    return dist, top_gid
+
+
+def merge_topk(dist_a, gid_a, dist_b, gid_b, k: int):
+    """Merge two top-k lists (used by the sharded all-gather reduction)."""
+    dist = jnp.concatenate([dist_a, dist_b], axis=-1)
+    gid = jnp.concatenate([gid_a, gid_b], axis=-1)
+    neg, idx = jax.lax.top_k(-dist, k)
+    return -neg, jnp.take_along_axis(gid, idx, axis=-1)
+
+
+def refine_sharded(store: PartitionStore, queries: jnp.ndarray,
+                   sel_part: jnp.ndarray, sel_lo: jnp.ndarray,
+                   sel_hi: jnp.ndarray, k: int, *, mesh, data_axis: str = "data"):
+    """Distributed refine: local masked scan + local top-k + all-gather merge.
+
+    ``store`` must be sharded over partitions on ``data_axis`` (P → data);
+    queries and the plan are replicated.  Partition ids inside ``sel_part``
+    are global; each device matches them against its local pid range.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    p_total = store.num_partitions
+    n_dev = mesh.shape[data_axis]
+    per_dev = p_total // n_dev
+
+    def local_fn(data, norms, rdfs, rgid, count, q, sp, lo, hi):
+        dev = jax.lax.axis_index(data_axis)
+        base = dev * per_dev
+        local_store = PartitionStore(data=data, norms=norms, rec_dfs=rdfs,
+                                     rec_gid=rgid, count=count)
+        # global → local partition ids; out-of-range → -1 (skipped locally)
+        sp_local = jnp.where((sp >= base) & (sp < base + per_dev),
+                             sp - base, -1)
+        dist, gid = refine(local_store, q, sp_local, lo, hi, k)
+        dist_all = jax.lax.all_gather(dist, data_axis, axis=0)   # [D, Q, k]
+        gid_all = jax.lax.all_gather(gid, data_axis, axis=0)
+        d = dist_all.transpose(1, 0, 2).reshape(q.shape[0], -1)
+        g = gid_all.transpose(1, 0, 2).reshape(q.shape[0], -1)
+        d = jnp.where(g >= 0, d, _INF)
+        neg, idx = jax.lax.top_k(-d, k)
+        return -neg, jnp.take_along_axis(g, idx, axis=-1)
+
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(data_axis), P(data_axis), P(data_axis), P(data_axis),
+                  P(data_axis), P(), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_rep=False)
+    return fn(store.data, store.norms, store.rec_dfs, store.rec_gid,
+              store.count, queries, sel_part, sel_lo, sel_hi)

@@ -1,0 +1,119 @@
+"""Vectorised trie descent — device-side counterpart of ``repro.core.trie``.
+
+The forest is a sorted edge-key table (``node_id * r + pivot``); descending a
+rank-sensitive signature is m rounds of binary search.  This replaces the
+paper's per-object pointer walk with a batched, XLA-friendly formulation that
+produces identical landing nodes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trie import TrieForest
+
+
+class TrieDevice(NamedTuple):
+    """Device-resident (replicated) view of the skeleton."""
+
+    edge_key: jnp.ndarray          # [E] int64, sorted
+    edge_child: jnp.ndarray        # [E] int32
+    has_children: jnp.ndarray      # [num_nodes] bool
+    node_size: jnp.ndarray         # [num_nodes] float32
+    node_depth: jnp.ndarray        # [num_nodes] int32
+    dfs_in: jnp.ndarray            # [num_nodes] int32
+    dfs_out: jnp.ndarray           # [num_nodes] int32
+    part_start: jnp.ndarray        # [num_nodes + 1] int32
+    part_ids_pad: jnp.ndarray      # [num_nodes, maxP] int32, -1 padded
+    group_root: jnp.ndarray        # [G] int32
+    group_default_part: jnp.ndarray  # [G] int32
+    num_pivots: int
+    num_partitions: int
+
+    @classmethod
+    def from_forest(cls, f: TrieForest) -> "TrieDevice":
+        n = f.num_nodes
+        maxp = max(f.max_parts_per_node, 1)
+        pad = np.full((n, maxp), -1, dtype=np.int32)
+        for i in range(n):
+            ps = f.node_partitions(i)
+            pad[i, : len(ps)] = ps
+        return cls(
+            edge_key=jnp.asarray(f.edge_key),
+            edge_child=jnp.asarray(f.edge_child),
+            has_children=jnp.asarray(np.diff(f.child_start) > 0),
+            node_size=jnp.asarray(f.node_size, dtype=jnp.float32),
+            node_depth=jnp.asarray(f.node_depth),
+            dfs_in=jnp.asarray(f.dfs_in),
+            dfs_out=jnp.asarray(f.dfs_out),
+            part_start=jnp.asarray(f.part_start),
+            part_ids_pad=jnp.asarray(pad),
+            group_root=jnp.asarray(f.group_root),
+            group_default_part=jnp.asarray(f.group_default_part),
+            num_pivots=f.num_pivots,
+            num_partitions=f.num_partitions,
+        )
+
+
+def descend(trie: TrieDevice, p4_rank: jnp.ndarray,
+            group: jnp.ndarray):
+    """Walk each signature down its group's trie as far as possible.
+
+    Args:
+      trie: device skeleton.
+      p4_rank: ``[..., m]`` rank-sensitive signatures.
+      group: ``[...]`` group ids.
+
+    Returns:
+      (node, pathlen, parent): landing node id (the paper's G_N), the number
+      of matched prefix pivots (PathLen in Algorithm 3), and the landing
+      node's parent (the "2nd-longest best match" memorised by
+      CLIMBER-kNN-Adaptive; equals the node itself at the root).
+    """
+    m = p4_rank.shape[-1]
+    e = trie.edge_key.shape[0]
+    node = trie.group_root[group].astype(jnp.int32)
+    parent = node
+    alive = jnp.ones(node.shape, dtype=bool)
+    pathlen = jnp.zeros(node.shape, dtype=jnp.int32)
+
+    for d in range(m):                             # m is small and static
+        key = node * trie.num_pivots + p4_rank[..., d].astype(jnp.int32)
+        pos = jnp.searchsorted(trie.edge_key, key)
+        pos_c = jnp.minimum(pos, e - 1)
+        found = alive & (trie.edge_key[pos_c] == key) & (pos < e)
+        parent = jnp.where(found, node, parent)
+        node = jnp.where(found, trie.edge_child[pos_c].astype(jnp.int32), node)
+        pathlen = pathlen + found.astype(jnp.int32)
+        alive = found
+    return node.astype(jnp.int32), pathlen, parent.astype(jnp.int32)
+
+
+def route_records(trie: TrieDevice, p4_rank: jnp.ndarray, group: jnp.ndarray):
+    """Placement routing (§V Step 4).
+
+    A record that completes a root-to-leaf walk goes to the leaf's partition;
+    a record stuck at an internal node goes to its group's default partition.
+    Its dfs tag is the landing node's dfs_in, which makes record↔node
+    attribution a single interval test at query time.
+
+    Returns:
+      (partition, rec_dfs): ``[...]`` each.
+    """
+    node, _, _ = descend(trie, p4_rank, group)
+    is_leaf = ~trie.has_children[node]
+    # A leaf's own partition is the first entry of its (singleton ∪ default)
+    # partition list; sorting in trie.py keeps the leaf's own pid present.
+    leaf_part = trie.part_ids_pad[node, 0]
+    # When default was prepended by sorting, the leaf's true pid may sit at
+    # slot 1; disambiguate via the dfs interval: a leaf's list is {own, default}
+    # and own != default only matters for placement balance, so prefer the
+    # non-default entry when available.
+    second = trie.part_ids_pad[node, 1]
+    default = trie.group_default_part[group]
+    own = jnp.where((leaf_part == default) & (second >= 0), second, leaf_part)
+    part = jnp.where(is_leaf, own, default)
+    return part.astype(jnp.int32), trie.dfs_in[node]

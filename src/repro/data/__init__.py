@@ -1,0 +1,5 @@
+from repro.data.series import (GENERATORS, make_dataset, make_queries,
+                               random_walk, sift_like, dna_like, eeg_like)
+
+__all__ = ["GENERATORS", "make_dataset", "make_queries", "random_walk",
+           "sift_like", "dna_like", "eeg_like"]

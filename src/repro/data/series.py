@@ -1,0 +1,81 @@
+"""Synthetic data-series generators matching the paper's datasets (§VII-A).
+
+  * RandomWalk — the standard data-series index benchmark [12,21,39,54]:
+    cumulative sums of N(0,1) steps, z-normalised.
+  * SIFT-like  — Texmex-style clustered feature vectors (mixture of Gaussians
+    around random centers; image descriptors cluster heavily).
+  * DNA-like   — smoothed step series from a 4-letter alphabet random walk,
+    mimicking the UCSC assembly conversion of [12].
+  * EEG-like   — sums of band-limited sinusoids + noise (seizure EEG records
+    are oscillatory).
+
+All generators are deterministic in the PRNG key, jit-able, and emit float32
+``[N, n]``.  Queries are drawn from the dataset itself, as in the paper
+("query objects are randomly selected from the entire dataset").
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paa import znormalize
+
+
+def random_walk(key: jax.Array, num: int, length: int) -> jnp.ndarray:
+    steps = jax.random.normal(key, (num, length), dtype=jnp.float32)
+    return znormalize(jnp.cumsum(steps, axis=-1))
+
+
+def sift_like(key: jax.Array, num: int, length: int,
+              num_clusters: int = 64, spread: float = 0.15) -> jnp.ndarray:
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (num_clusters, length), dtype=jnp.float32)
+    assign = jax.random.randint(ka, (num,), 0, num_clusters)
+    noise = jax.random.normal(kn, (num, length), dtype=jnp.float32) * spread
+    return znormalize(centers[assign] + noise)
+
+
+def dna_like(key: jax.Array, num: int, length: int,
+             smooth: int = 8) -> jnp.ndarray:
+    k1, = jax.random.split(key, 1)
+    # 4-letter alphabet mapped to levels, random-walk accumulated as in [12]
+    letters = jax.random.randint(k1, (num, length), 0, 4).astype(jnp.float32)
+    levels = letters - 1.5
+    walk = jnp.cumsum(levels, axis=-1)
+    kernel = jnp.ones((smooth,), dtype=jnp.float32) / smooth
+    smoothed = jax.vmap(lambda s: jnp.convolve(s, kernel, mode="same"))(walk)
+    return znormalize(smoothed)
+
+
+def eeg_like(key: jax.Array, num: int, length: int,
+             num_bands: int = 5) -> jnp.ndarray:
+    kf, kp, ka, kn = jax.random.split(key, 4)
+    freqs = jax.random.uniform(kf, (num, num_bands), minval=0.5, maxval=40.0)
+    phases = jax.random.uniform(kp, (num, num_bands), maxval=2 * jnp.pi)
+    amps = jax.random.uniform(ka, (num, num_bands), minval=0.2, maxval=1.0)
+    t = jnp.arange(length, dtype=jnp.float32) / 400.0   # 400 Hz sampling
+    waves = amps[..., None] * jnp.sin(
+        2 * jnp.pi * freqs[..., None] * t + phases[..., None])
+    noise = jax.random.normal(kn, (num, length)) * 0.3
+    return znormalize(jnp.sum(waves, axis=1) + noise)
+
+
+GENERATORS = {
+    "randomwalk": random_walk,
+    "sift": sift_like,
+    "dna": dna_like,
+    "eeg": eeg_like,
+}
+
+
+def make_dataset(name: str, key: jax.Array, num: int, length: int) -> jnp.ndarray:
+    return GENERATORS[name](key, num, length)
+
+
+def make_queries(key: jax.Array, data: jnp.ndarray, num_queries: int) -> jnp.ndarray:
+    """Paper §VII-A: queries are random members of the dataset."""
+    idx = jax.random.choice(key, data.shape[0], shape=(num_queries,),
+                            replace=False)
+    return data[idx]

@@ -1,0 +1,73 @@
+"""Gradient compression: int8 error-feedback all-reduce.
+
+Cross-pod DCI links are the slowest hop in a multi-pod job, and the only
+traffic they must carry is the once-per-step gradient all-reduce.  This
+module quantises gradients to int8 with a per-tensor scale before the
+cross-pod psum and keeps the quantisation error as local feedback state
+(added back before the next step's quantisation) — the classic EF-SGD
+scheme, which preserves convergence where plain one-shot quantisation
+doesn't.
+
+Usage: wrap per-shard gradients inside a shard_map (the pod axis must be a
+manual axis), carrying ``error`` state alongside the optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantisation.  Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_allreduce_leaf(grad: jnp.ndarray, error: jnp.ndarray,
+                      axis_name: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback compressed mean over ``axis_name`` for one tensor.
+
+    Returns (reduced_grad_f32, new_error).
+    """
+    g32 = grad.astype(jnp.float32) + error
+    q, scale = quantize_int8(g32)
+    deq = dequantize_int8(q, scale)
+    new_error = g32 - deq                      # local feedback memory
+    # psum of the dequantised payload models int8 wire traffic + fp32 combine
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    reduced = jax.lax.psum(deq, axis_name) / n
+    return reduced, new_error
+
+
+def ef_allreduce_tree(grads: Any, errors: Any, axis_name: str
+                      ) -> Tuple[Any, Any]:
+    """Tree version: apply ef_allreduce_leaf leaf-wise."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(errors)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        rg, ne = ef_allreduce_leaf(g, e, axis_name)
+        out_g.append(rg)
+        out_e.append(ne)
+    return (jax.tree_util.tree_unflatten(tdef, out_g),
+            jax.tree_util.tree_unflatten(tdef, out_e))
+
+
+def init_error_tree(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compression_ratio(tree: Any) -> float:
+    """Wire-bytes ratio of int8+scale vs fp32 for a gradient tree."""
+    total_f32 = sum(x.size * 4 for x in jax.tree_util.tree_leaves(tree))
+    total_q = sum(x.size * 1 + 4 for x in jax.tree_util.tree_leaves(tree))
+    return total_q / total_f32

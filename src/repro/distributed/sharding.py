@@ -1,0 +1,97 @@
+"""Activation/cache sharding rules (the in/out sharding contract).
+
+Weights follow ``repro.models.params.param_pspecs``.  Caches follow the
+per-family rules below:
+
+  * KV caches shard the **kv-heads dim over `model`** when divisible —
+    zero-collective decode attention;
+  * otherwise they shard the **sequence dim over `model`** (flash-decoding
+    style: GSPMD turns the softmax over the sharded seq into partial-softmax
+    + all-reduce) — this covers kv=4/8/20/40 archs on the 16-way axis;
+  * SSM states shard heads over `model` (mamba heads are plentiful), conv
+    tails shard channels;
+  * batch always shards over every non-model axis (pod × data).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.models import ssm as SSM_mod
+from repro.utils.config import ModelConfig
+
+
+def _axes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh):
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _div(n: int, mesh, axis="model") -> bool:
+    return n % _axes(mesh)[axis] == 0
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, batch: int, max_len: int,
+                 enc_len: int = 0, img_len: int = 0) -> Dict[str, Any]:
+    """PartitionSpec tree matching ``repro.models.decoding.cache_shapes``."""
+    import numpy as np
+    ba = batch_axes(mesh)
+    sizes = _axes(mesh)
+    n_batch = int(np.prod([sizes[a] for a in ba]))
+    if batch % n_batch != 0:
+        ba = None                     # e.g. global_batch=1 long-context decode
+    kv_ok = _div(cfg.num_kv_heads, mesh) and not cfg.use_mla
+    seq_ok = _div(max_len, mesh)
+
+    def kv_spec(lead: int, seq_dim_len: int):
+        """[*lead, B, S, KV, hd] — prefer heads sharding, else seq."""
+        lead_spec = (None,) * lead
+        if kv_ok:
+            return PS(*lead_spec, ba, None, "model", None)
+        if seq_dim_len % _axes(mesh)["model"] == 0:
+            return PS(*lead_spec, ba, "model", None, None)
+        return PS(*lead_spec, ba, None, None, None)
+
+    if cfg.family in ("dense", "moe") and not cfg.use_mla:
+        return {"k": kv_spec(1, max_len), "v": kv_spec(1, max_len), "len": PS()}
+    if cfg.use_mla:
+        s = PS(None, ba, "model", None) if seq_ok else PS(None, ba, None, None)
+        return {"ckv": s, "len": PS()}
+    if cfg.family == "ssm":
+        _, h, _ = SSM_mod.ssm_dims(cfg)
+        hspec = "model" if _div(h, mesh) else None
+        d_in, _, n = SSM_mod.ssm_dims(cfg)
+        conv_ch = d_in + 2 * n
+        cspec = "model" if _div(conv_ch, mesh) else None
+        return {"h": PS(None, ba, hspec, None, None),
+                "conv": PS(None, ba, None, cspec), "len": PS()}
+    if cfg.family == "hybrid":
+        d_in, h, n = SSM_mod.ssm_dims(cfg)
+        conv_ch = d_in + 2 * n
+        hspec = "model" if _div(h, mesh) else None
+        cspec = "model" if _div(conv_ch, mesh) else None
+        return {"h": PS(None, None, ba, hspec, None, None),
+                "conv": PS(None, None, ba, None, cspec),
+                "k": kv_spec(1, max_len), "v": kv_spec(1, max_len),
+                "len": PS()}
+    if cfg.family == "encdec":
+        return {"k": kv_spec(1, max_len), "v": kv_spec(1, max_len),
+                "xk": kv_spec(1, enc_len), "xv": kv_spec(1, enc_len),
+                "len": PS()}
+    if cfg.family == "vlm":
+        return {"k": kv_spec(2, max_len), "v": kv_spec(2, max_len),
+                "xk": kv_spec(1, img_len), "xv": kv_spec(1, img_len),
+                "len": PS()}
+    raise ValueError(cfg.family)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, batch: int, max_len: int,
+                    enc_len: int = 0, img_len: int = 0):
+    specs = cache_pspecs(cfg, mesh, batch, max_len, enc_len, img_len)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, PS))

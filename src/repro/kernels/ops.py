@@ -1,0 +1,45 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode — the
+kernel bodies run as Python/jnp on the host, which validates the exact TPU
+code path.  On a real TPU backend ``interpret`` flips to False automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import l2 as _l2
+from repro.kernels import paa_kernel as _paa_k
+from repro.kernels import pivot_rank as _pr
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pairwise_l2(q: jnp.ndarray, x: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Squared ED matrix ``[Q, C]`` (see kernels/l2.py)."""
+    return _l2.pairwise_l2(q, x, interpret=_interpret(), **kw)
+
+
+def qdots(q: jnp.ndarray, rows: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Per-query candidate dots ``[Q, C]`` (see kernels/l2.py)."""
+    return _l2.qdots(q, rows, interpret=_interpret(), **kw)
+
+
+def batched_query_dots(q: jnp.ndarray, rows: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Refine-stage entry point: rows ``[Q, MP, cap, n]`` → ``[Q, MP, cap]``."""
+    qn, mp, cap, n = rows.shape
+    flat = rows.reshape(qn, mp * cap, n)
+    return qdots(q, flat, **kw).reshape(qn, mp, cap)
+
+
+def paa(x: jnp.ndarray, segments: int, **kw) -> jnp.ndarray:
+    """PAA mean-pool ``[B, n]`` → ``[B, w]`` (see kernels/paa_kernel.py)."""
+    return _paa_k.paa(x, segments, interpret=_interpret(), **kw)
+
+
+def pivot_rank(paa_sig: jnp.ndarray, pivots: jnp.ndarray, m: int, **kw) -> jnp.ndarray:
+    """Fused P4→ generation ``[B, m]`` (see kernels/pivot_rank.py)."""
+    return _pr.pivot_rank(paa_sig, pivots, m, interpret=_interpret(), **kw)

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: PAA segmentation (memory-bound mean-pool).
+
+PAA over a billion-series repository is a pure streaming reduce: every raw
+series byte is read exactly once and n/w-reduced.  The kernel tiles the batch
+dimension so each VMEM block holds BLOCK_B raw series ([BLOCK_B, n] fp32) and
+emits [BLOCK_B, w]; the reshape-reduce happens in registers.  Roofline-wise
+this op sits on the HBM-bandwidth line — the kernel's job is simply to not
+lose to it (no extra passes, no transposes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _paa_kernel(x_ref, out_ref, *, segments: int):
+    x = x_ref[...].astype(jnp.float32)            # [bb, n]
+    bb, n = x.shape
+    seg = n // segments
+    out_ref[...] = jnp.mean(x.reshape(bb, segments, seg), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("segments", "block_b", "interpret"))
+def paa(x: jnp.ndarray, segments: int, *,
+        block_b: int = DEFAULT_BLOCK_B,
+        interpret: bool = False) -> jnp.ndarray:
+    """PAA: ``[B, n]`` → ``[B, w]`` float32 (n divisible by w)."""
+    b, n = x.shape
+    if n % segments:
+        raise ValueError(f"series length {n} not divisible by w={segments}")
+    bb = min(block_b, max(b, 1))
+    b_pad = (-b) % bb
+    if b_pad:
+        x = jnp.pad(x, ((0, b_pad), (0, 0)))
+    gb = x.shape[0] // bb
+
+    out = pl.pallas_call(
+        functools.partial(_paa_kernel, segments=segments),
+        grid=(gb,),
+        in_specs=[pl.BlockSpec((bb, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, segments), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], segments), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[:b]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; the kernels must match them (see
+tests/test_kernels.py for the shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_l2_ref(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Squared ED between every query and every candidate.
+
+    q: [Q, n], x: [C, n] → [Q, C] float32.
+    """
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    q2 = jnp.sum(q * q, axis=-1)[:, None]
+    x2 = jnp.sum(x * x, axis=-1)[None, :]
+    return jnp.maximum(q2 - 2.0 * (q @ x.T) + x2, 0.0)
+
+
+def qdots_ref(q: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """Per-query dot products against that query's own candidate rows.
+
+    q: [Q, n], rows: [Q, C, n] → [Q, C] float32.
+    """
+    return jnp.einsum("qn,qcn->qc", q.astype(jnp.float32),
+                      rows.astype(jnp.float32))
+
+
+def paa_ref(x: jnp.ndarray, segments: int) -> jnp.ndarray:
+    """PAA mean-pool.  x: [B, n] → [B, w] float32."""
+    b, n = x.shape
+    seg = n // segments
+    return jnp.mean(x.astype(jnp.float32).reshape(b, segments, seg), axis=-1)
+
+
+def pivot_rank_ref(paa: jnp.ndarray, pivots: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Fused pivot distance + top-m prefix extraction.
+
+    paa: [B, w], pivots: [r, w] → [B, m] int32 (ids of m nearest pivots,
+    ascending distance, ties toward the lower id).
+    """
+    paa = paa.astype(jnp.float32)
+    pivots = pivots.astype(jnp.float32)
+    a2 = jnp.sum(paa * paa, axis=-1, keepdims=True)
+    b2 = jnp.sum(pivots * pivots, axis=-1)
+    d = jnp.maximum(a2 - 2.0 * (paa @ pivots.T) + b2, 0.0)
+    _, idx = jax.lax.top_k(-d, m)
+    return idx.astype(jnp.int32)

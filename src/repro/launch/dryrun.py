@@ -1,0 +1,382 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. constructs the abstract parameter/optimizer/batch/cache trees
+     (ShapeDtypeStruct only — nothing is allocated),
+  3. jits the right step (train_step / prefill / decode a.k.a. serve_step)
+     with the full sharding contract, ``.lower().compile()``s it,
+  4. prints ``memory_analysis()`` + ``cost_analysis()`` and writes the
+     roofline terms to ``artifacts/dryrun/<arch>_<shape>_<mesh>.json``.
+
+Skip rules (recorded in DESIGN.md): ``long_500k`` runs only for the
+sub-quadratic archs (zamba2, mamba2) — dense-attention archs would need a
+500k dense KV per step, exactly the blow-up the harness exempts.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both [--force]
+"""
+from __future__ import annotations
+
+# The container has ONE real CPU device; the dry-run needs 512 placeholder
+# devices BEFORE jax initialises (jax locks the device count on first init).
+# These two lines MUST precede every other import, including `from repro...`.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.configs import ARCHS, get_config
+from repro.distributed.sharding import cache_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model, count_params, decode_step, prefill
+from repro.models.decoding import cache_shapes
+from repro.train.optimizer import AdamW, constant_lr
+from repro.train.train_step import (make_batch_shardings,
+                                    make_state_shardings, shard_train_step)
+from repro.utils import roofline as RL
+from repro.utils.config import ModelConfig, SHAPES, get_shape
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+# ----------------------------------------------------------------------
+# abstract inputs
+# ----------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    shape = get_shape(shape_name)
+    sds = jax.ShapeDtypeStruct
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s + 1), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds((b, cfg.num_image_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds((b, cfg.num_image_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len cache
+    enc_len = s if cfg.family == "encdec" else 0
+    img_len = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    return {
+        "token": sds((b, 1), jnp.int32),
+        "cache": cache_shapes(cfg, b, s, enc_len=enc_len, img_len=img_len),
+    }
+
+
+def cell_is_skipped(cfg: ModelConfig, shape_name: str) -> str:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return ("pure full-attention arch: 500k dense KV per decode step is "
+                "the quadratic blow-up the long_500k rule exempts")
+    return ""
+
+
+# ----------------------------------------------------------------------
+# the cell runner
+# ----------------------------------------------------------------------
+def unit_scaler(cfg: ModelConfig):
+    """(unit_count, make_cfg(units)) — 'unit' = one scanned layer group."""
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_attn_every
+        return cfg.num_layers // per, \
+            lambda u: cfg.replace(num_layers=u * per)
+    if cfg.family == "vlm":
+        per = cfg.cross_attn_every
+        return cfg.num_layers // per, \
+            lambda u: cfg.replace(num_layers=u * per)
+    if cfg.family == "encdec":
+        return cfg.num_layers, \
+            lambda u: cfg.replace(num_layers=u, num_encoder_layers=u)
+    return cfg.num_layers, lambda u: cfg.replace(num_layers=u)
+
+
+def pick_microbatches(cfg: ModelConfig, shape, mesh) -> int:
+    """Gradient-accumulation depth so saved activations stay ≤ ~3 GB/device.
+
+    Napkin model: the remat residual set is 2 block outputs per layer,
+    [B, S, D] bf16, sharded over batch shards × the model axis (sequence
+    parallelism).  µ splits the global batch; capped so each microbatch
+    still shards evenly.
+    """
+    if shape.kind != "train":
+        return 1
+    import numpy as np
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shards = int(np.prod([v for k, v in sizes.items() if k != "model"]))
+    layers = cfg.num_layers + cfg.num_encoder_layers
+    per_layer = (2 * shape.global_batch * shape.seq_len * cfg.d_model * 2
+                 / (shards * sizes["model"]))
+    total = per_layer * layers
+    target = 3 * (1 << 30)
+    cap = max(shape.global_batch // shards, 1)
+    mu = 1
+    while total / mu > target and mu < cap:
+        mu *= 2
+    return mu
+
+
+def active_params(cfg: ModelConfig, n_params: int) -> int:
+    """MoE: only top-k of the routed experts are active per token
+    (MODEL_FLOPS = 6·N_active·D per the roofline spec)."""
+    if cfg.family != "moe" or not cfg.num_experts:
+        return n_params
+    routed = 3 * cfg.num_experts * cfg.d_model * cfg.d_ff * cfg.num_layers
+    inactive = routed * (1.0 - cfg.experts_per_token / cfg.num_experts)
+    return int(n_params - inactive)
+
+
+def lower_cell(cfg: ModelConfig, shape_name: str, mesh, kv_chunk: int,
+               microbatches: int = 0):
+    """Build + .lower() the right step for one cell.  Returns (lowered, meta).
+
+    ``microbatches``: 0 = derive from this cfg.  Cost compiles must pass the
+    FULL config's µ so the reduced-depth graphs share the real structure.
+    """
+    shape = get_shape(shape_name)
+    batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+    model = Model(cfg, mesh=mesh, batch_axes=batch_axes)
+    params_abs = model.abstract()
+    n_params = count_params(model.infos())
+
+    if shape.kind == "train":
+        opt = AdamW(lr=constant_lr(3e-4))
+        batch_abs = input_specs(cfg, shape_name)
+        mu = microbatches or pick_microbatches(cfg, shape, mesh)
+        jitted, _ = shard_train_step(model, opt, mesh, batch_abs,
+                                     kv_chunk=kv_chunk, donate=False,
+                                     microbatches=mu)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        tokens = shape.global_batch * shape.seq_len
+        kind = "train"
+    else:
+        p_shard, _ = make_state_shardings(mesh, model)
+        enc_len = shape.seq_len if cfg.family == "encdec" else 0
+        img_len = cfg.num_image_tokens if cfg.family == "vlm" else 0
+        n_batch_shards = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        logits_bspec = batch_axes if shape.global_batch % n_batch_shards == 0 \
+            else None
+        logits_shard = NamedSharding(mesh, PS(logits_bspec, None, None))
+        c_shard = cache_shardings(cfg, mesh, shape.global_batch,
+                                  shape.seq_len, enc_len=enc_len,
+                                  img_len=img_len)
+        if shape.kind == "prefill":
+            batch_abs = input_specs(cfg, shape_name)
+            b_shard = make_batch_shardings(mesh, batch_abs)
+
+            def fn(params, batch):
+                return prefill(model, params, batch, kv_chunk=kv_chunk)
+
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                             out_shardings=(logits_shard, c_shard))
+            lowered = jitted.lower(params_abs, batch_abs)
+            tokens = shape.global_batch * shape.seq_len
+        else:                                            # decode
+            spec = input_specs(cfg, shape_name)
+            t_shard = make_batch_shardings(mesh, {"token": spec["token"]})
+
+            def fn(params, cache, token):
+                return decode_step(model, params, cache, token)
+
+            jitted = jax.jit(
+                fn, in_shardings=(p_shard, c_shard, t_shard["token"]),
+                out_shardings=(logits_shard, c_shard))
+            lowered = jitted.lower(params_abs, spec["cache"], spec["token"])
+            tokens = shape.global_batch                   # one token / seq
+        kind = "serve"
+    return lowered, {"n_params": n_params, "tokens": tokens, "kind": kind}
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = RL.collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def measure_scaled_cost(cfg: ModelConfig, shape_name: str, mesh,
+                        kv_chunk: int):
+    """Exact per-step cost via two fully-unrolled reduced-depth compiles.
+
+    XLA cost analysis counts while-loop bodies ONCE, so the scanned
+    full-depth module undercounts.  We compile 1-unit and 2-unit variants
+    with every inner scan unrolled; the difference is exactly one layer
+    group, and  total = cost(1) + (units-1) * Δ  is exact.
+    """
+    from repro.models.layers import set_inner_unroll
+    units, make_cfg = unit_scaler(cfg)
+    # µ comes from the FULL config: the reduced-depth cost graphs must share
+    # the real step's microbatch structure (fully unrolled below)
+    mu = pick_microbatches(cfg, get_shape(shape_name), mesh)
+    set_inner_unroll(True)
+    try:
+        c1 = lower_cell(make_cfg(1), shape_name, mesh, kv_chunk,
+                        microbatches=mu)[0].compile()
+        f1, b1, coll1 = _cost_of(c1)
+        del c1
+        c2 = lower_cell(make_cfg(2), shape_name, mesh, kv_chunk,
+                        microbatches=mu)[0].compile()
+        f2, b2, coll2 = _cost_of(c2)
+        del c2
+    finally:
+        set_inner_unroll(False)
+    scale = units - 1
+    # deltas can be slightly negative from XLA rewrite differences between
+    # the two depths (e.g. a reduce pattern fusing differently); clamp —
+    # a negative per-layer cost is physically meaningless.
+    flops = f1 + scale * max(f2 - f1, 0.0)
+    byts = b1 + scale * max(b2 - b1, 0.0)
+    coll = {k: int(coll1[k] + scale * max(coll2[k] - coll1[k], 0))
+            for k in coll1}
+    return flops, byts, coll
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             kv_chunk: int = 2048, verbose: bool = True,
+             skip_cost: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    skip = cell_is_skipped(cfg, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    # ---- 1. full-config compile: the "it compiles and fits" proof --------
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg, shape_name, mesh, kv_chunk)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    del lowered, compiled
+
+    # ---- 2. exact cost via unrolled two-point measurement ---------------
+    if skip_cost:
+        flops = byts = 0.0
+        coll = {}
+    else:
+        flops, byts, coll = measure_scaled_cost(cfg, shape_name, mesh,
+                                                kv_chunk)
+
+    mflops = RL.model_flops(meta["n_params"], meta["tokens"], meta["kind"],
+                            active_params=active_params(cfg,
+                                                        meta["n_params"]))
+    # decode: the mandatory per-token traffic is one read of weights + cache
+    model_bytes = 0.0
+    if shape.kind == "decode":
+        cache_bytes = sum(
+            float(np.prod(s.shape)) * s.dtype.itemsize
+            for s in jax.tree_util.tree_leaves(
+                input_specs(cfg, shape_name)["cache"]))
+        model_bytes = meta["n_params"] * 2 + cache_bytes
+    report = RL.RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops_per_device=mflops / n_dev,
+        model_bytes_per_device=model_bytes / n_dev,
+        peak_memory_bytes=float(mem.temp_size_in_bytes
+                                + mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes),
+    )
+    result = {
+        "status": "ok", "num_params": meta["n_params"], "num_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        },
+        **report.to_dict(),
+    }
+    if verbose:
+        gb = 1 << 30
+        print(f"[{arch} × {shape_name} × {mesh_name}]"
+              f" params={meta['n_params']/1e9:.2f}B"
+              f" args={result['memory']['argument_bytes']/gb:.2f}GiB/dev"
+              f" temp={result['memory']['temp_bytes']/gb:.2f}GiB/dev"
+              f" flops/dev={report.flops_per_device:.3g}"
+              f" coll/dev={report.coll_bytes_per_device/1e6:.1f}MB"
+              f" bottleneck={report.bottleneck}"
+              f" roofline={report.roofline_fraction:.2f}"
+              f" (lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print("  memory_analysis:", {k: v for k, v in result["memory"].items()})
+        print("  cost_analysis: flops=%.4g bytes=%.4g" %
+              (report.flops_per_device, report.bytes_per_device))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kv-chunk", type=int, default=2048)
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="compile-proof only (multi-pod pass); roofline "
+                         "terms come from the single-pod artifacts")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = [s.name for s in SHAPES] if args.shape == "all" \
+        else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                out = ART_DIR / f"{arch}_{shape_name}_{mesh_name}.json"
+                if out.exists() and not args.force:
+                    print(f"skip existing {out.name}")
+                    continue
+                try:
+                    res = run_cell(arch, shape_name, multi_pod=multi,
+                                   kv_chunk=args.kv_chunk,
+                                   skip_cost=args.skip_cost)
+                except Exception as e:                     # noqa: BLE001
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append(out.name)
+                out.write_text(json.dumps(res, indent=2))
+    if failures:
+        print(f"\nFAILED cells: {failures}")
+        raise SystemExit(1)
+    print("\nall requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""End-to-end training driver.
+
+Runs any assigned arch (smoke or full config) for N steps with the complete
+substrate engaged: sharded train step, deterministic resumable data pipeline,
+atomic checkpointing, watchdog + retry-with-restore recovery.
+
+CPU example (used by tests and examples/quickstart):
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m --smoke \
+      --steps 20 --batch 4 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.models import Model
+from repro.train import checkpoint as ckpt_mod
+from repro.train.fault_tolerance import WatchdogPolicy, run_with_recovery
+from repro.train.optimizer import AdamW, warmup_cosine
+from repro.train.train_step import make_train_step, shard_train_step
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 20, batch: int = 4,
+          seq: int = 64, ckpt_dir: Optional[str] = None,
+          checkpoint_every: int = 10, lr: float = 3e-4, kv_chunk: int = 64,
+          mesh=None, microbatches: int = 1, log_every: int = 5,
+          seed: int = 0, data_mode: str = "uniform"):
+    cfg = get_config(arch, smoke=smoke)
+    model = Model(cfg, mesh=mesh,
+                  batch_axes=tuple(a for a in (mesh.axis_names if mesh else ())
+                                   if a != "model") or ("data",))
+    opt = AdamW(lr=warmup_cosine(lr, max(steps // 10, 1), steps))
+    pipe = TokenPipeline(cfg, batch, seq, seed=seed, mode=data_mode)
+
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    start_step = 0
+
+    if mesh is not None:
+        batch_shapes = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            pipe.batch_at(0))
+        step_fn, (p_sh, o_sh, _) = shard_train_step(
+            model, opt, mesh, batch_shapes, kv_chunk=kv_chunk,
+            donate=False, microbatches=microbatches)
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+    else:
+        step_fn = jax.jit(make_train_step(model, opt, kv_chunk=kv_chunk,
+                                          microbatches=microbatches))
+        p_sh = o_sh = None
+
+    if ckpt_dir and ckpt_mod.latest_step(ckpt_dir) is not None:
+        state = {"params": params, "opt": opt_state}
+        sh = {"params": p_sh, "opt": o_sh} if p_sh is not None else None
+        state, start_step, _ = ckpt_mod.restore_checkpoint(
+            ckpt_dir, state, shardings=sh)
+        params, opt_state = state["params"], state["opt"]
+        print(f"restored checkpoint at step {start_step}")
+
+    losses = []
+    state = {"params": params, "opt": opt_state}
+
+    def one_step(step: int) -> dict:
+        batch_step = pipe.batch_at(step)
+        p, o, metrics = step_fn(state["params"], state["opt"], batch_step)
+        loss = float(metrics["loss"])
+        if not np.isfinite(loss):
+            raise RuntimeError(f"non-finite loss at step {step}")
+        state["params"], state["opt"] = p, o
+        losses.append(loss)
+        if step % log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+        return metrics
+
+    def save(step: int) -> None:
+        if ckpt_dir:
+            ckpt_mod.save_checkpoint(
+                ckpt_dir, step, {"params": state["params"],
+                                 "opt": state["opt"]},
+                extra={"pipeline": pipe.state_dict(step)})
+            ckpt_mod.prune_checkpoints(ckpt_dir)
+
+    def restore() -> int:
+        if not ckpt_dir:
+            return start_step
+        st = {"params": state["params"], "opt": state["opt"]}
+        sh = {"params": p_sh, "opt": o_sh} if p_sh is not None else None
+        st, step, _ = ckpt_mod.restore_checkpoint(ckpt_dir, st, shardings=sh)
+        state["params"], state["opt"] = st["params"], st["opt"]
+        return step
+
+    final = run_with_recovery(
+        one_step, start_step=start_step, num_steps=steps, save_fn=save,
+        restore_fn=restore, checkpoint_every=checkpoint_every,
+        watchdog=WatchdogPolicy())
+    if ckpt_dir:
+        save(final)
+    return state["params"], losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    _, losses = train(args.arch, smoke=args.smoke, steps=args.steps,
+                      batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+                      lr=args.lr, microbatches=args.microbatches)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.model import Model, cross_entropy
+from repro.models.decoding import (cache_shapes, decode_step, init_cache,
+                                   prefill)
+from repro.models.params import (ParamInfo, abstract_params, count_params,
+                                 init_params, param_pspecs)
+
+__all__ = ["Model", "cross_entropy", "cache_shapes", "decode_step",
+           "init_cache", "prefill", "ParamInfo", "abstract_params",
+           "count_params", "init_params", "param_pspecs"]

@@ -1,0 +1,360 @@
+"""KV/SSM caches, prefill and single-token decode for every family.
+
+Cache layouts (all leading-``layers``-stacked so decode scans over them):
+  dense-GQA / moe : k, v   [L, B, S_max, KV, hd]
+  dense-MLA       : ckv    [L, B, S_max, kv_lora + rope]      (compressed)
+  ssm             : h [L, B, H, hd, N] fp32; conv [L, B, 3, C]
+  hybrid          : per-group ssm states + shared-attn caches [G, B, S, KV, hd]
+  encdec          : decoder self k/v + precomputed cross k/v over enc states
+  vlm             : per-group self k/v + precomputed cross k/v over patches
+
+``cache_len`` is a scalar int32 carried in the cache dict; decode writes at
+that position and masks validity with it (static shapes, GSPMD-friendly
+dynamic_update_slice).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.model import Model
+from repro.utils.config import ModelConfig
+
+
+
+
+def _scan_u(*args, **kw):
+    """lax.scan that honours the cost-compile unroll flag (outer scans)."""
+    kw.setdefault("unroll", _iu())
+    return jax.lax.scan(*args, **kw)
+
+def _iu():
+    from repro.models.layers import INNER_SCAN_UNROLL
+    return INNER_SCAN_UNROLL or 1
+
+
+# ----------------------------------------------------------------------
+# cache construction
+# ----------------------------------------------------------------------
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                 enc_len: int = 0, img_len: int = 0) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree of the decode cache (dry-run + init)."""
+    dt = jnp.bfloat16
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    sds = jax.ShapeDtypeStruct
+
+    if cfg.family in ("dense", "moe") and not cfg.use_mla:
+        return {"k": sds((cfg.num_layers, batch, max_len, kv, hd), dt),
+                "v": sds((cfg.num_layers, batch, max_len, kv, hd), dt),
+                "len": sds((), jnp.int32)}
+    if cfg.use_mla:
+        width = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        return {"ckv": sds((cfg.num_layers, batch, max_len, width), dt),
+                "len": sds((), jnp.int32)}
+    if cfg.family == "ssm":
+        d_in, h, n = SSM.ssm_dims(cfg)
+        conv_ch = d_in + 2 * n
+        return {"h": sds((cfg.num_layers, batch, h, cfg.ssm_head_dim, n),
+                         jnp.float32),
+                "conv": sds((cfg.num_layers, batch, SSM.CONV_W - 1, conv_ch), dt),
+                "len": sds((), jnp.int32)}
+    if cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.hybrid_attn_every
+        per = cfg.hybrid_attn_every
+        d_in, h, n = SSM.ssm_dims(cfg)
+        conv_ch = d_in + 2 * n
+        return {"h": sds((groups, per, batch, h, cfg.ssm_head_dim, n),
+                         jnp.float32),
+                "conv": sds((groups, per, batch, SSM.CONV_W - 1, conv_ch), dt),
+                "k": sds((groups, batch, max_len, kv, hd), dt),
+                "v": sds((groups, batch, max_len, kv, hd), dt),
+                "len": sds((), jnp.int32)}
+    if cfg.family == "encdec":
+        return {"k": sds((cfg.num_layers, batch, max_len, kv, hd), dt),
+                "v": sds((cfg.num_layers, batch, max_len, kv, hd), dt),
+                "xk": sds((cfg.num_layers, batch, enc_len, kv, hd), dt),
+                "xv": sds((cfg.num_layers, batch, enc_len, kv, hd), dt),
+                "len": sds((), jnp.int32)}
+    if cfg.family == "vlm":
+        groups = cfg.num_layers // cfg.cross_attn_every
+        spg = cfg.cross_attn_every - 1
+        return {"k": sds((groups, spg, batch, max_len, kv, hd), dt),
+                "v": sds((groups, spg, batch, max_len, kv, hd), dt),
+                "xk": sds((groups, batch, img_len, kv, hd), dt),
+                "xv": sds((groups, batch, img_len, kv, hd), dt),
+                "len": sds((), jnp.int32)}
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0, img_len: int = 0):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        cache_shapes(cfg, batch, max_len, enc_len, img_len))
+
+
+# ----------------------------------------------------------------------
+# decode step
+# ----------------------------------------------------------------------
+def decode_step(model: Model, params, cache: Dict[str, Any],
+                token: jnp.ndarray) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One-token decode.  token: [B, 1] int32 → (logits [B, 1, V], cache')."""
+    cfg = model.cfg
+    x = L.embed(params["embed"], token)
+    clen = cache["len"]
+
+    if cfg.family in ("dense", "moe") and not cfg.use_mla:
+        def body(h, xs):
+            lp, ck, cv = xs
+            a, nk, nv = L.gqa_decode(lp["attn"], L.rmsnorm(h, lp["ln1"]),
+                                     ck, cv, clen, cfg)
+            h = h + a
+            hn = L.rmsnorm(h, lp["ln2"])
+            if cfg.family == "moe":
+                h = h + model._moe_apply(lp["moe"], hn)
+            else:
+                h = h + L.swiglu(lp["mlp"], hn)
+            return h, (nk, nv)
+
+        x, (nk, nv) = _scan_u(body, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": nk, "v": nv, "len": clen + 1}
+
+    elif cfg.use_mla:
+        def body(h, xs):
+            lp, ckv = xs
+            a, nckv = L.mla_decode(lp["attn"], L.rmsnorm(h, lp["ln1"]),
+                                   ckv, clen, cfg)
+            h = h + a
+            h = h + L.swiglu(lp["mlp"], L.rmsnorm(h, lp["ln2"]))
+            return h, nckv
+
+        x, nckv = _scan_u(body, x, (params["layers"], cache["ckv"]))
+        new_cache = {"ckv": nckv, "len": clen + 1}
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            lp, hs, cs = xs
+            out, st = SSM.ssd_decode(lp["ssm"], L.rmsnorm(h, lp["ln"]),
+                                     SSM.SSMState(hs, cs), cfg)
+            return h + out, (st.h, st.conv)
+
+        x, (nh, nc) = _scan_u(body, x,
+                                   (params["layers"], cache["h"], cache["conv"]))
+        new_cache = {"h": nh, "conv": nc, "len": clen + 1}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def inner(h, xs):
+            lp, hs, cs = xs
+            out, st = SSM.ssd_decode(lp["ssm"], L.rmsnorm(h, lp["ln"]),
+                                     SSM.SSMState(hs, cs), cfg)
+            return h + out, (st.h, st.conv)
+
+        def group(h, xs):
+            gp, hs, cs, ck, cv = xs
+            h, (nh, ncv) = _scan_u(inner, h, (gp, hs, cs),
+                                        unroll=_iu())
+            a, nk, nv = L.gqa_decode(shared["attn"],
+                                     L.rmsnorm(h, shared["ln1"]),
+                                     ck, cv, clen, cfg)
+            h = h + a
+            h = h + L.swiglu(shared["mlp"], L.rmsnorm(h, shared["ln2"]))
+            return h, (nh, ncv, nk, nv)
+
+        x, (nh, nc, nk, nv) = _scan_u(
+            group, x, (params["layers"], cache["h"], cache["conv"],
+                       cache["k"], cache["v"]))
+        new_cache = {"h": nh, "conv": nc, "k": nk, "v": nv, "len": clen + 1}
+
+    elif cfg.family == "encdec":
+        def body(h, xs):
+            lp, ck, cv, xk, xv = xs
+            a, nk, nv = L.gqa_decode(lp["self_attn"],
+                                     L.rmsnorm(h, lp["ln1"]), ck, cv, clen, cfg)
+            h = h + a
+            c = L.gqa_attention(lp["cross_attn"], L.rmsnorm(h, lp["ln_x"]),
+                                cfg, causal=False, kv_override=(xk, xv),
+                                kv_chunk=xk.shape[1])
+            h = h + c
+            h = h + L.swiglu(lp["mlp"], L.rmsnorm(h, lp["ln2"]))
+            return h, (nk, nv)
+
+        x, (nk, nv) = _scan_u(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        new_cache = {**cache, "k": nk, "v": nv, "len": clen + 1}
+
+    elif cfg.family == "vlm":
+        def inner(h, xs):
+            lp, ck, cv = xs
+            a, nk, nv = L.gqa_decode(lp["attn"], L.rmsnorm(h, lp["ln1"]),
+                                     ck, cv, clen, cfg)
+            h = h + a
+            h = h + L.swiglu(lp["mlp"], L.rmsnorm(h, lp["ln2"]))
+            return h, (nk, nv)
+
+        def group(h, xs):
+            gp, cp, ck, cv, xk, xv = xs
+            h, (nk, nv) = _scan_u(inner, h, (gp, ck, cv),
+                                       unroll=_iu())
+            a = L.gqa_attention(cp["attn"], L.rmsnorm(h, cp["ln1"]), cfg,
+                                causal=False, kv_override=(xk, xv),
+                                kv_chunk=xk.shape[1])
+            h = h + jnp.tanh(cp["gate"]).astype(h.dtype) * a
+            h = h + L.swiglu(cp["mlp"], L.rmsnorm(h, cp["ln2"]))
+            return h, (nk, nv)
+
+        x, (nk, nv) = _scan_u(
+            group, x, (params["layers"], params["cross_layers"],
+                       cache["k"], cache["v"], cache["xk"], cache["xv"]))
+        new_cache = {**cache, "k": nk, "v": nv, "len": clen + 1}
+
+    else:
+        raise ValueError(cfg.family)
+
+    logits = L.unembed(params["embed"], x)
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------------
+# prefill
+# ----------------------------------------------------------------------
+def prefill(model: Model, params, batch: Dict[str, jnp.ndarray], *,
+            max_len: int = 0, kv_chunk: int = 2048
+            ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Process the prompt, returning (logits [B, S, V], cache at len S)."""
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_len = max(max_len, s)
+    x = L.embed(params["embed"], tokens)
+
+    def pad_seq(t):
+        if max_len == s:
+            return t
+        return jnp.pad(t, ((0, 0), (0, max_len - s)) + ((0, 0),) * (t.ndim - 2))
+
+    if cfg.family in ("dense", "moe") and not cfg.use_mla:
+        def body(h, lp):
+            h = model.constrain_acts(h)
+            a, k, v = L.gqa_prefill(lp["attn"], L.rmsnorm(h, lp["ln1"]), cfg,
+                                    kv_chunk=kv_chunk)
+            h = h + a
+            hn = L.rmsnorm(h, lp["ln2"])
+            if cfg.family == "moe":
+                h = h + model._moe_apply(lp["moe"], hn)
+            else:
+                h = h + L.swiglu(lp["mlp"], hn)
+            return h, (model.constrain_kv(pad_seq(k)),
+                       model.constrain_kv(pad_seq(v)))
+
+        x, (ks, vs) = _scan_u(body, x, params["layers"])
+        cache = {"k": ks, "v": vs, "len": jnp.int32(s)}
+
+    elif cfg.use_mla:
+        def body(h, lp):
+            h = model.constrain_acts(h)
+            a, ckv = L.mla_prefill(lp["attn"], L.rmsnorm(h, lp["ln1"]), cfg,
+                                   kv_chunk=kv_chunk)
+            h = h + a
+            h = h + L.swiglu(lp["mlp"], L.rmsnorm(h, lp["ln2"]))
+            return h, model.constrain_kv(pad_seq(ckv))
+
+        x, ckvs = _scan_u(body, x, params["layers"])
+        cache = {"ckv": ckvs, "len": jnp.int32(s)}
+
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            h = model.constrain_acts(h)
+            y, st = SSM.ssd_forward_with_state(
+                lp["ssm"], L.rmsnorm(h, lp["ln"]), cfg)
+            return h + y, (st.h, st.conv)
+
+        x, (hs, cs) = _scan_u(body, x, params["layers"])
+        cache = {"h": hs, "conv": cs, "len": jnp.int32(s)}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def inner(h, lp):
+            y, st = SSM.ssd_forward_with_state(
+                lp["ssm"], L.rmsnorm(h, lp["ln"]), cfg)
+            return h + y, (st.h, st.conv)
+
+        def group(h, gp):
+            h = model.constrain_acts(h)
+            h, (hs, cs) = jax.lax.scan(inner, h, gp, unroll=_iu())
+            a, k, v = L.gqa_prefill(shared["attn"], L.rmsnorm(h, shared["ln1"]),
+                                    cfg, kv_chunk=kv_chunk)
+            h = h + a
+            h = h + L.swiglu(shared["mlp"], L.rmsnorm(h, shared["ln2"]))
+            return h, (hs, cs, model.constrain_kv(pad_seq(k)),
+                       model.constrain_kv(pad_seq(v)))
+
+        x, (hs, cs, ks, vs) = _scan_u(group, x, params["layers"])
+        cache = {"h": hs, "conv": cs, "k": ks, "v": vs, "len": jnp.int32(s)}
+
+    elif cfg.family == "encdec":
+        enc = model._encode(params, batch["frames"], kv_chunk=kv_chunk)
+
+        def body(h, lp):
+            h = model.constrain_acts(h)
+            a, k, v = L.gqa_prefill(lp["self_attn"], L.rmsnorm(h, lp["ln1"]),
+                                    cfg, kv_chunk=kv_chunk)
+            h = h + a
+            xk = jnp.einsum("bsd,dkh->bskh", enc, lp["cross_attn"]["wk"])
+            xv = jnp.einsum("bsd,dkh->bskh", enc, lp["cross_attn"]["wv"])
+            c = L.gqa_attention(lp["cross_attn"], L.rmsnorm(h, lp["ln_x"]),
+                                cfg, causal=False, kv_override=(xk, xv),
+                                kv_chunk=kv_chunk)
+            h = h + c
+            h = h + L.swiglu(lp["mlp"], L.rmsnorm(h, lp["ln2"]))
+            return h, (model.constrain_kv(pad_seq(k)),
+                       model.constrain_kv(pad_seq(v)),
+                       model.constrain_kv(xk),
+                       model.constrain_kv(xv))
+
+        x, (ks, vs, xks, xvs) = _scan_u(body, x, params["layers"])
+        cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs, "len": jnp.int32(s)}
+
+    elif cfg.family == "vlm":
+        img = batch["image_embeds"]
+
+        def inner(h, lp):
+            a, k, v = L.gqa_prefill(lp["attn"], L.rmsnorm(h, lp["ln1"]), cfg,
+                                    kv_chunk=kv_chunk)
+            h = h + a
+            h = h + L.swiglu(lp["mlp"], L.rmsnorm(h, lp["ln2"]))
+            return h, (model.constrain_kv(pad_seq(k)),
+                       model.constrain_kv(pad_seq(v)))
+
+        def group(h, xs):
+            gp, cp = xs
+            h = model.constrain_acts(h)
+            h, (ks, vs) = jax.lax.scan(inner, h, gp, unroll=_iu())
+            xk = jnp.einsum("bsd,dkh->bskh", img, cp["attn"]["wk"])
+            xv = jnp.einsum("bsd,dkh->bskh", img, cp["attn"]["wv"])
+            a = L.gqa_attention(cp["attn"], L.rmsnorm(h, cp["ln1"]), cfg,
+                                causal=False, kv_override=(xk, xv),
+                                kv_chunk=kv_chunk)
+            h = h + jnp.tanh(cp["gate"]).astype(h.dtype) * a
+            h = h + L.swiglu(cp["mlp"], L.rmsnorm(h, cp["ln2"]))
+            return h, (ks, vs, model.constrain_kv(xk),
+                       model.constrain_kv(xv))
+
+        x, (ks, vs, xks, xvs) = _scan_u(
+            group, x, (params["layers"], params["cross_layers"]))
+        cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs, "len": jnp.int32(s)}
+
+    else:
+        raise ValueError(cfg.family)
+
+    logits = L.unembed(params["embed"], x)
+    return logits, cache

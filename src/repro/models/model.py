@@ -1,0 +1,368 @@
+"""Model assembly for the assigned architecture pool.
+
+Families: dense (GQA or MLA), moe, ssm (Mamba2), hybrid (Zamba2-style),
+encdec (Whisper-style), vlm (Llama-3.2-Vision-style).
+
+Conventions:
+  * scan-over-layers everywhere — per-layer params carry a leading
+    ``layers`` dim, so the HLO stays one-layer-sized regardless of depth and
+    GSPMD pipelines layer i+1's FSDP all-gather against layer i's compute;
+  * forward(..) is the shared body; ``train_loss`` adds next-token CE;
+    ``prefill`` additionally returns the KV/SSM cache; ``decode_step``
+    advances one token.
+  * the modality frontends of [audio]/[vlm] archs are STUBS per the harness:
+    the batch provides precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.params import ParamInfo, abstract_params, init_params
+from repro.utils.config import ModelConfig
+
+
+# ----------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------
+def stack_infos(tree, n: int, axis_name: str = "layers"):
+    return jax.tree_util.tree_map(
+        lambda i: ParamInfo((n,) + i.shape, (axis_name,) + i.logical,
+                            i.dtype, i.init, i.scale),
+        tree, is_leaf=lambda x: isinstance(x, ParamInfo))
+
+
+
+
+def _scan_u(*args, **kw):
+    """lax.scan that honours the cost-compile unroll flag (outer scans)."""
+    kw.setdefault("unroll", _iu())
+    return jax.lax.scan(*args, **kw)
+
+def _iu():
+    """Inner-scan unroll flag (see layers.set_inner_unroll) — cost compiles
+    fully unroll nested layer-group scans so XLA counts every iteration."""
+    from repro.models.layers import INNER_SCAN_UNROLL
+    return INNER_SCAN_UNROLL or 1
+
+def _remat(fn, cfg: ModelConfig):
+    """Layer-scan remat policy.
+
+    'dots' (the default; name kept for config compat) saves ONLY tensors
+    tagged ``blk_out`` — the [B,S,D] block outputs.  A literal
+    checkpoint_dots policy would save every attention-score / SSD-score dot
+    across the layer scan (hundreds of GB at 32k context); block outputs are
+    the classic activation-checkpointing residual set.
+    """
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.save_only_these_names("blk_out")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)          # "full": save nothing
+
+
+def _tag(x):
+    from jax.ad_checkpoint import checkpoint_name
+    return checkpoint_name(x, "blk_out")
+
+
+# §Perf knob: sequence-parallel sharding of saved activations (the layer-scan
+# carry).  ON keeps remat residuals 1/model-axis smaller at the cost of
+# per-layer all-gathers; OFF trades memory for collectives.  The perf harness
+# flips this per-cell to find each arch's better side.
+SEQ_SHARD_ACTS = True
+
+
+def set_seq_shard_acts(flag: bool) -> None:
+    global SEQ_SHARD_ACTS
+    SEQ_SHARD_ACTS = bool(flag)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token CE in fp32.  logits [B,S,V], labels [B,S]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# ----------------------------------------------------------------------
+# per-layer block bodies
+# ----------------------------------------------------------------------
+def _dense_layer_infos(cfg: ModelConfig) -> Dict[str, Any]:
+    attn = L.mla_infos(cfg) if cfg.use_mla else L.gqa_infos(cfg)
+    return {"ln1": L.rmsnorm_info(cfg.d_model),
+            "attn": attn,
+            "ln2": L.rmsnorm_info(cfg.d_model),
+            "mlp": L.swiglu_infos(cfg)}
+
+
+def _dense_layer(p, x, cfg: ModelConfig, *, kv_chunk=2048):
+    h = L.rmsnorm(x, p["ln1"])
+    if cfg.use_mla:
+        a = L.mla_attention(p["attn"], h, cfg, kv_chunk=kv_chunk)
+    else:
+        a = L.gqa_attention(p["attn"], h, cfg, causal=True, kv_chunk=kv_chunk)
+    x = x + _tag(a)
+    return x + _tag(L.swiglu(p["mlp"], L.rmsnorm(x, p["ln2"])))
+
+
+def _moe_layer_infos(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln1": L.rmsnorm_info(cfg.d_model),
+            "attn": L.gqa_infos(cfg),
+            "ln2": L.rmsnorm_info(cfg.d_model),
+            "moe": MOE.moe_infos(cfg)}
+
+
+def _ssm_layer_infos(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln": L.rmsnorm_info(cfg.d_model), "ssm": SSM.ssm_infos(cfg)}
+
+
+# ----------------------------------------------------------------------
+# the Model object
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    mesh: Any = None                       # optional: enables shard_map MoE
+    batch_axes: Tuple[str, ...] = ("data",)
+
+    # ---------------- parameter trees ----------------
+    def infos(self):
+        cfg = self.cfg
+        base = {"embed": L.embedding_infos(cfg)}
+        if cfg.family in ("dense",):
+            base["layers"] = stack_infos(_dense_layer_infos(cfg), cfg.num_layers)
+        elif cfg.family == "moe":
+            base["layers"] = stack_infos(_moe_layer_infos(cfg), cfg.num_layers)
+        elif cfg.family == "ssm":
+            base["layers"] = stack_infos(_ssm_layer_infos(cfg), cfg.num_layers)
+        elif cfg.family == "hybrid":
+            groups = cfg.num_layers // cfg.hybrid_attn_every
+            per_group = stack_infos(_ssm_layer_infos(cfg), cfg.hybrid_attn_every)
+            base["layers"] = stack_infos(per_group, groups)
+            base["shared_attn"] = {"ln1": L.rmsnorm_info(cfg.d_model),
+                                   "attn": L.gqa_infos(cfg),
+                                   "ln2": L.rmsnorm_info(cfg.d_model),
+                                   "mlp": L.swiglu_infos(cfg)}
+        elif cfg.family == "encdec":
+            enc_layer = {"ln1": L.rmsnorm_info(cfg.d_model),
+                         "attn": L.gqa_infos(cfg),
+                         "ln2": L.rmsnorm_info(cfg.d_model),
+                         "mlp": L.swiglu_infos(cfg)}
+            dec_layer = {"ln1": L.rmsnorm_info(cfg.d_model),
+                         "self_attn": L.gqa_infos(cfg),
+                         "ln_x": L.rmsnorm_info(cfg.d_model),
+                         "cross_attn": L.gqa_infos(cfg),
+                         "ln2": L.rmsnorm_info(cfg.d_model),
+                         "mlp": L.swiglu_infos(cfg)}
+            base["encoder"] = stack_infos(enc_layer, cfg.num_encoder_layers)
+            base["enc_norm"] = L.rmsnorm_info(cfg.d_model)
+            base["layers"] = stack_infos(dec_layer, cfg.num_layers)
+        elif cfg.family == "vlm":
+            groups = cfg.num_layers // (cfg.cross_attn_every)
+            self_per_group = cfg.cross_attn_every - 1
+            self_layer = _dense_layer_infos(cfg)
+            cross_layer = {"ln1": L.rmsnorm_info(cfg.d_model),
+                           "attn": L.gqa_infos(cfg),
+                           "gate": ParamInfo((1,), (None,), init="zeros",
+                                             dtype=jnp.float32),
+                           "ln2": L.rmsnorm_info(cfg.d_model),
+                           "mlp": L.swiglu_infos(cfg)}
+            base["layers"] = stack_infos(stack_infos(self_layer, self_per_group),
+                                         groups)
+            base["cross_layers"] = stack_infos(cross_layer, groups)
+        else:
+            raise ValueError(f"unknown family {cfg.family!r}")
+        return base
+
+    def init(self, key: jax.Array):
+        return init_params(self.infos(), key)
+
+    def abstract(self):
+        return abstract_params(self.infos())
+
+    # ---------------- forward bodies ----------------
+    def _moe_apply(self, p, x):
+        return MOE.moe_apply(p, x, self.cfg, mesh=self.mesh,
+                             batch_axes=self.batch_axes)
+
+    def constrain_acts(self, x):
+        """Sequence-parallel sharding constraint for the layer-scan carry.
+
+        Saved activations (the remat residual set) shard over BOTH the batch
+        axes and the model axis (sequence dim) — without this, an 88-layer
+        arch at 4k context saves an unsharded [B,S,D] per layer and blows
+        HBM.  GSPMD inserts the all-gather before attention and the
+        reduce-scatter after (Korthikanti-style sequence parallelism).
+        """
+        if self.mesh is None or x.ndim != 3 or not SEQ_SHARD_ACTS:
+            return x
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as PS
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        b, s, _ = x.shape
+        nb = int(np.prod([sizes[a] for a in self.batch_axes]))
+        bspec = self.batch_axes if b % nb == 0 else None
+        sspec = "model" if (s > 1 and s % sizes["model"] == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, PS(bspec, sspec, None)))
+
+    def constrain_kv(self, x):
+        """Cache-layout constraint for prefill-produced K/V ([B,S,KV,hd]) or
+        MLA latents ([B,S,W]).  Must be applied INSIDE the layer scan —
+        constraining only at the jit output boundary leaves full-sequence
+        stacks live across the scan (tens of GB at 32k prefill)."""
+        if self.mesh is None or x.ndim not in (3, 4):
+            return x
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as PS
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        b, s = x.shape[0], x.shape[1]
+        nb = int(np.prod([sizes[a] for a in self.batch_axes]))
+        bspec = self.batch_axes if b % nb == 0 else None
+        if x.ndim == 4 and x.shape[2] % sizes["model"] == 0:
+            spec = PS(bspec, None, "model", None)          # kv-heads sharded
+        elif s % sizes["model"] == 0:
+            spec = PS(bspec, "model", *([None] * (x.ndim - 2)))  # seq sharded
+        else:
+            spec = PS(bspec, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def _backbone(self, params, x, *, kv_chunk=2048, img=None):
+        """Token stream through the stacked layers (no embed/unembed)."""
+        cfg = self.cfg
+
+        if cfg.family == "dense":
+            def body(h, lp):
+                h = self.constrain_acts(h)
+                return _dense_layer(lp, h, cfg, kv_chunk=kv_chunk), None
+            x, _ = _scan_u(_remat(body, cfg), x, params["layers"])
+            return x
+
+        if cfg.family == "moe":
+            def body(h, lp):
+                h = self.constrain_acts(h)
+                a = L.gqa_attention(lp["attn"], L.rmsnorm(h, lp["ln1"]),
+                                    cfg, causal=True, kv_chunk=kv_chunk)
+                h = h + _tag(a)
+                return h + _tag(self._moe_apply(lp["moe"],
+                                                L.rmsnorm(h, lp["ln2"]))), None
+            x, _ = _scan_u(_remat(body, cfg), x, params["layers"])
+            return x
+
+        if cfg.family == "ssm":
+            def body(h, lp):
+                h = self.constrain_acts(h)
+                return h + _tag(SSM.ssd_forward(
+                    lp["ssm"], L.rmsnorm(h, lp["ln"]), cfg)), None
+            x, _ = _scan_u(_remat(body, cfg), x, params["layers"])
+            return x
+
+        if cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def inner(h, lp):
+                return h + _tag(SSM.ssd_forward(
+                    lp["ssm"], L.rmsnorm(h, lp["ln"]), cfg)), None
+
+            def group(h, gp):
+                h = self.constrain_acts(h)
+                h, _ = jax.lax.scan(inner, h, gp, unroll=_iu())
+                a = L.gqa_attention(shared["attn"], L.rmsnorm(h, shared["ln1"]),
+                                    cfg, causal=True, kv_chunk=kv_chunk)
+                h = h + _tag(a)
+                h = h + _tag(L.swiglu(shared["mlp"],
+                                      L.rmsnorm(h, shared["ln2"])))
+                return h, None
+
+            x, _ = _scan_u(_remat(group, cfg), x, params["layers"])
+            return x
+
+        if cfg.family == "vlm":
+            def group(h, gps):
+                h = self.constrain_acts(h)
+                gp, cp = gps
+                def inner(hh, lp):
+                    return _dense_layer(lp, hh, cfg, kv_chunk=kv_chunk), None
+                h, _ = jax.lax.scan(inner, h, gp, unroll=_iu())
+                # gated cross-attention onto the (stub) image embeddings
+                k = jnp.einsum("bsd,dkh->bskh", img, cp["attn"]["wk"])
+                v = jnp.einsum("bsd,dkh->bskh", img, cp["attn"]["wv"])
+                a = L.gqa_attention(cp["attn"], L.rmsnorm(h, cp["ln1"]), cfg,
+                                    causal=False, kv_override=(k, v),
+                                    kv_chunk=kv_chunk)
+                h = h + _tag(jnp.tanh(cp["gate"]).astype(h.dtype) * a)
+                h = h + _tag(L.swiglu(cp["mlp"], L.rmsnorm(h, cp["ln2"])))
+                return h, None
+
+            x, _ = _scan_u(_remat(group, cfg), x,
+                                (params["layers"], params["cross_layers"]))
+            return x
+
+        raise ValueError(cfg.family)
+
+    def _encode(self, params, frames, *, kv_chunk=2048):
+        """Whisper encoder over stub frame embeddings [B, S_enc, D]."""
+        cfg = self.cfg
+
+        def body(h, lp):
+            h = self.constrain_acts(h)
+            a = L.gqa_attention(lp["attn"], L.rmsnorm(h, lp["ln1"]), cfg,
+                                causal=False, kv_chunk=kv_chunk)
+            h = h + _tag(a)
+            return h + _tag(L.swiglu(lp["mlp"], L.rmsnorm(h, lp["ln2"]))), None
+
+        h, _ = _scan_u(_remat(body, cfg), frames, params["encoder"])
+        return L.rmsnorm(h, params["enc_norm"])
+
+    def _decoder(self, params, x, enc, *, kv_chunk=2048):
+        cfg = self.cfg
+
+        def body(h, lp):
+            h = self.constrain_acts(h)
+            a = L.gqa_attention(lp["self_attn"], L.rmsnorm(h, lp["ln1"]), cfg,
+                                causal=True, kv_chunk=kv_chunk)
+            h = h + _tag(a)
+            k = jnp.einsum("bsd,dkh->bskh", enc, lp["cross_attn"]["wk"])
+            v = jnp.einsum("bsd,dkh->bskh", enc, lp["cross_attn"]["wv"])
+            c = L.gqa_attention(lp["cross_attn"], L.rmsnorm(h, lp["ln_x"]),
+                                cfg, causal=False, kv_override=(k, v),
+                                kv_chunk=kv_chunk)
+            h = h + _tag(c)
+            return h + _tag(L.swiglu(lp["mlp"], L.rmsnorm(h, lp["ln2"]))), None
+
+        h, _ = _scan_u(_remat(body, cfg), x, params["layers"])
+        return h
+
+    # ---------------- public entry points ----------------
+    def forward(self, params, batch: Dict[str, jnp.ndarray], *,
+                kv_chunk: int = 2048) -> jnp.ndarray:
+        """Logits [B, S, V] for a full sequence (train / eval)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = L.embed(params["embed"], tokens)
+        if cfg.family == "encdec":
+            enc = self._encode(params, batch["frames"], kv_chunk=kv_chunk)
+            x = self._decoder(params, x, enc, kv_chunk=kv_chunk)
+        elif cfg.family == "vlm":
+            x = self._backbone(params, x, kv_chunk=kv_chunk,
+                               img=batch["image_embeds"])
+        else:
+            x = self._backbone(params, x, kv_chunk=kv_chunk)
+        return L.unembed(params["embed"], x)
+
+    def train_loss(self, params, batch, *, kv_chunk: int = 2048) -> jnp.ndarray:
+        """Next-token CE.  batch['tokens'] is [B, S+1]."""
+        inp = {**batch, "tokens": batch["tokens"][:, :-1]}
+        logits = self.forward(params, inp, kv_chunk=kv_chunk)
+        return cross_entropy(logits, batch["tokens"][:, 1:])

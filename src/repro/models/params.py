@@ -1,0 +1,110 @@
+"""Parameter-spec system: one source of truth for shapes, init and sharding.
+
+Every model builder returns a pytree of :class:`ParamInfo` leaves.  From that
+single tree we derive
+  * randomly initialised parameters (smoke tests / real training),
+  * abstract ``ShapeDtypeStruct`` parameters (dry-run lowering — no memory),
+  * ``PartitionSpec`` trees via the logical-axis rules (MaxText-style).
+
+Logical axes used across the zoo:
+  embed   — d_model rows/cols         → FSDP-sharded over the data axis
+  vocab   — embedding/output vocab    → model axis
+  heads   — attention heads           → model axis
+  kv_heads— KV heads                  → model axis iff divisible, else replicated
+  ff      — MLP hidden                → model axis
+  experts — MoE expert dim            → replicated (experts are TP-sharded on ff)
+  layers  — scan dimension            → replicated
+  (None)  — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as PS
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamInfo:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]    # one logical axis name per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_info(x) -> bool:
+    return isinstance(x, ParamInfo)
+
+
+def init_params(tree, key: jax.Array):
+    """Materialise random parameters from a ParamInfo tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_info)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(info: ParamInfo, k):
+        if info.init == "zeros":
+            return jnp.zeros(info.shape, info.dtype)
+        if info.init == "ones":
+            return jnp.ones(info.shape, info.dtype)
+        return (jax.random.normal(k, info.shape, jnp.float32)
+                * info.scale).astype(info.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(i, k) for i, k in zip(leaves, keys)])
+
+
+def abstract_params(tree):
+    """ShapeDtypeStruct tree for .lower() — never allocates."""
+    return jax.tree_util.tree_map(
+        lambda i: jax.ShapeDtypeStruct(i.shape, i.dtype), tree,
+        is_leaf=_is_info)
+
+
+# logical axis name → mesh axis (or None).  The data axis doubles as the
+# FSDP axis (weights sharded over it, gathered per layer inside scan).
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "embed": "data",
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",       # dropped at spec time if not divisible
+    "ff": "model",
+    "experts": None,
+    "layers": None,
+    "state": None,
+    "hd": None,
+    "conv": None,
+    "lora": None,
+    "groups": None,
+}
+
+
+def param_pspecs(tree, mesh_axis_sizes: Dict[str, int],
+                 rules: Optional[Dict[str, Optional[str]]] = None):
+    """PartitionSpec tree; silently replicates axes that don't divide."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    def one(info: ParamInfo):
+        spec = []
+        for dim, name in zip(info.shape, info.logical):
+            axis = rules.get(name) if name else None
+            if axis is not None and axis in mesh_axis_sizes \
+                    and dim % mesh_axis_sizes[axis] == 0:
+                spec.append(axis)
+            else:
+                spec.append(None)
+        return PS(*spec)
+
+    return jax.tree_util.tree_map(one, tree, is_leaf=_is_info)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=_is_info)
+    return int(sum(np.prod(l.shape) if _is_info(l) else l.size
+                   for l in leaves))

@@ -1,0 +1,191 @@
+"""Mamba2 / SSD block (state-space duality, arXiv:2405.21060).
+
+Used by ``mamba2-780m`` (pure SSM) and ``zamba2-2.7b`` (hybrid backbone).
+
+Training/prefill uses the chunked SSD algorithm: the sequence is cut into
+chunks of Q tokens; within a chunk the contribution is a masked quadratic
+(attention-like) einsum, across chunks a single recurrent state
+``h ∈ [B, H, hd, N]`` is carried by ``lax.scan``.  Cost is
+O(S·Q·(hd+N)·H) — linear in S — and the per-chunk tensors are the only
+transients, so 32k prefill and 500k decode both fit.
+
+Decode is the O(1) recurrence: ``h ← h·exp(dtA) + dt·x ⊗ B; y = C·h``.
+
+Simplifications vs the reference CUDA implementation (recorded in
+DESIGN.md): n_groups = 1 (the Mamba2 default), causal-conv width 4 on the
+(x, B, C) channels, gated RMSNorm before out-projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+from repro.models.params import ParamInfo
+from repro.utils.config import ModelConfig
+
+CONV_W = 4
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_state
+
+
+def ssm_infos(cfg: ModelConfig) -> Dict[str, ParamInfo]:
+    d = cfg.d_model
+    d_in, h, n = ssm_dims(cfg)
+    conv_ch = d_in + 2 * n                       # x, B, C channels (G=1)
+    return {
+        "w_xz": ParamInfo((d, 2 * d_in), ("embed", "ff")),
+        "w_bc": ParamInfo((d, 2 * n), ("embed", None)),
+        "w_dt": ParamInfo((d, h), ("embed", None)),
+        "dt_bias": ParamInfo((h,), (None,), init="zeros", dtype=jnp.float32),
+        "a_log": ParamInfo((h,), (None,), init="zeros", dtype=jnp.float32),
+        "d_skip": ParamInfo((h,), (None,), init="ones", dtype=jnp.float32),
+        "conv_w": ParamInfo((CONV_W, conv_ch), ("conv", "ff"), scale=0.5),
+        "norm": ParamInfo((d_in,), ("ff",), init="ones"),
+        "out_proj": ParamInfo((d_in, d), ("ff", "embed")),
+    }
+
+
+class SSMState(NamedTuple):
+    """Decode-time state: recurrent h + causal-conv tail."""
+
+    h: jnp.ndarray          # [B, H, hd, N] float32
+    conv: jnp.ndarray       # [B, CONV_W - 1, conv_ch]
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> SSMState:
+    d_in, h, n = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    return SSMState(
+        h=jnp.zeros((batch, h, hd, n), jnp.float32),
+        conv=jnp.zeros((batch, CONV_W - 1, d_in + 2 * n), dtype),
+    )
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, width CONV_W.  x: [B, S, C]; w: [CONV_W, C]."""
+    pads = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + x.shape[1], :] * w[i] for i in range(CONV_W))
+    return jax.nn.silu(out)
+
+
+def _project(p, x: jnp.ndarray, cfg: ModelConfig):
+    d_in, h, n = ssm_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["w_xz"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"])
+    return x_in, z, bc, dt
+
+
+def ssd_forward(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Chunked SSD over the full sequence.  x: [B, S, D] → [B, S, D]."""
+    y, _ = ssd_forward_with_state(p, x, cfg)
+    return y
+
+
+def ssd_forward_with_state(p, x: jnp.ndarray, cfg: ModelConfig
+                           ) -> Tuple[jnp.ndarray, SSMState]:
+    """Chunked SSD returning (output, final decode state) — exact prefill."""
+    b, s, d = x.shape
+    d_in, h, n = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by ssm_chunk {q}"
+    nc = s // q
+
+    x_in, z, bc, dt = _project(p, x, cfg)
+    conv_in = jnp.concatenate([x_in, bc], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"])
+    x_c = conv_out[..., :d_in].reshape(b, s, h, hd)
+    b_c = conv_out[..., d_in:d_in + n]                    # [B, S, N]
+    c_c = conv_out[..., d_in + n:]                        # [B, S, N]
+
+    a = -jnp.exp(p["a_log"])                              # [H], negative
+    da = dt * a                                           # [B, S, H]
+
+    # chunk views
+    xq = x_c.reshape(b, nc, q, h, hd).astype(jnp.float32)
+    bq = b_c.reshape(b, nc, q, n).astype(jnp.float32)
+    cq = c_c.reshape(b, nc, q, n).astype(jnp.float32)
+    dtq = dt.reshape(b, nc, q, h)
+    daq = da.reshape(b, nc, q, h)
+
+    def chunk_body(hstate, inp):
+        xb, bb, cb, dtb, dab = inp                        # [B, Q, ...]
+        cum = jnp.cumsum(dab, axis=1)                     # [B, Q, H]
+        # intra-chunk: decay(i, j) = exp(cum_i - cum_j), i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]    # [B, Q, Q, H]
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", cb, bb)       # [B, Q, Q]
+        w = scores[..., None] * decay * dtb[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xb)    # [B, Q, H, hd]
+
+        # inter-chunk: contribution of the carried state
+        state_decay = jnp.exp(cum)                        # [B, Q, H]
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cb, hstate, state_decay)
+
+        # state update: h' = h * exp(total) + sum_j exp(total - cum_j) dt_j x_j B_j
+        total = cum[:, -1, :]                             # [B, H]
+        suffix = jnp.exp(total[:, None, :] - cum)         # [B, Q, H]
+        upd = jnp.einsum("bjhp,bjn,bjh,bjh->bhpn", xb, bb, dtb, suffix)
+        h_new = hstate * jnp.exp(total)[:, :, None, None] + upd
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, hd, n), jnp.float32)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (xq, bq, cq, dtq, daq))
+    # checkpoint the chunk body: the [Q, Q, H] intra-chunk score tensors are
+    # recomputed in backward instead of being saved across all chunks.
+    from repro.models.layers import INNER_SCAN_UNROLL
+    h_final, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, inputs,
+                               unroll=INNER_SCAN_UNROLL or 1)  # [nc,B,Q,H,hd]
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hd)
+    y = y + p["d_skip"][None, None, :, None] * x_c.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+
+    # gated norm + out projection (mamba2 layout)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+    # decode state: carried SSD state + causal-conv input tail
+    conv_tail = conv_in[:, s - (CONV_W - 1):, :]
+    return out, SSMState(h=h_final, conv=conv_tail)
+
+
+def ssd_decode(p, x: jnp.ndarray, state: SSMState, cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, SSMState]:
+    """One-token recurrent step.  x: [B, 1, D] → ([B, 1, D], state)."""
+    b = x.shape[0]
+    d_in, h, n = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    x_in, z, bc, dt = _project(p, x, cfg)                 # S = 1
+    conv_in = jnp.concatenate([x_in, bc], axis=-1)        # [B, 1, C]
+    window = jnp.concatenate([state.conv, conv_in], axis=1)  # [B, CONV_W, C]
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"]))
+    new_conv = window[:, 1:, :]
+
+    x_c = conv_out[:, :d_in].reshape(b, h, hd).astype(jnp.float32)
+    b_c = conv_out[:, d_in:d_in + n].astype(jnp.float32)
+    c_c = conv_out[:, d_in + n:].astype(jnp.float32)
+    dt1 = dt[:, 0, :]                                     # [B, H]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt1 * a)                              # [B, H]
+
+    h_new = state.h * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", x_c, b_c, dt1)
+    y = jnp.einsum("bn,bhpn->bhp", c_c, h_new)
+    y = y + p["d_skip"][None, :, None] * x_c
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, SSMState(h=h_new, conv=new_conv)

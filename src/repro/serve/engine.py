@@ -1,0 +1,128 @@
+"""Batched serving engine: continuous prefill + decode over request slots.
+
+A miniature vLLM-shaped loop adapted to static shapes:
+  * fixed number of slots (the serving batch), each slot holds one sequence;
+  * new requests prefill into a free slot's cache region;
+  * every engine tick decodes one token for all live slots;
+  * finished slots (EOS or max_len) are freed and refilled.
+
+Static-shape adaptation (recorded in DESIGN.md): slot caches are a single
+[B_slots, ...] cache tree at max_len; per-slot lengths are data, not shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model, decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 256, eos_id: int = -1):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        cfg = model.cfg
+        enc_len = max_len if cfg.family == "encdec" else 0
+        img_len = cfg.num_image_tokens if cfg.family == "vlm" else 0
+        self.cache = init_cache(cfg, slots, max_len, enc_len=enc_len,
+                                img_len=img_len)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_len = np.zeros(slots, dtype=np.int32)
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(model, p, c, t))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # -- slot management -------------------------------------------------
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (one at a time; a real
+        engine batches prefills — this keeps the single-slot cache insert
+        simple and exact)."""
+        for i in range(self.slots):
+            if self.slot_req[i] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            s = len(req.prompt)
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            cfg = self.model.cfg
+            if cfg.family == "encdec":
+                batch["frames"] = jnp.zeros((1, s, cfg.d_model), jnp.bfloat16)
+            if cfg.family == "vlm":
+                batch["image_embeds"] = jnp.zeros(
+                    (1, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+            logits, cache1 = prefill(self.model, self.params, batch,
+                                     max_len=self.max_len, kv_chunk=64)
+            # write slot i of the engine cache from the single-row cache
+            def put(full, one):
+                if one.ndim == 0:
+                    return full
+                # batch dim position differs per cache entry; match by shape
+                for axis in range(one.ndim):
+                    if one.shape[axis] == 1 and full.shape[axis] == self.slots:
+                        idx = [slice(None)] * one.ndim
+                        idx[axis] = i
+                        return full.at[tuple(idx)].set(one[tuple(
+                            [slice(None)] * axis + [0]
+                            + [slice(None)] * (one.ndim - axis - 1))])
+                return full
+            self.cache = jax.tree_util.tree_map(put, self.cache, cache1)
+            self.cache["len"] = jnp.int32(0)   # per-slot lens tracked below
+            nxt = int(jnp.argmax(logits[0, -1]))
+            req.generated.append(nxt)
+            self.slot_req[i] = req
+            self.slot_len[i] = s
+
+    def _tick_tokens(self) -> jnp.ndarray:
+        toks = np.zeros((self.slots, 1), dtype=np.int32)
+        for i, req in enumerate(self.slot_req):
+            if req is not None and req.generated:
+                toks[i, 0] = req.generated[-1]
+        return jnp.asarray(toks)
+
+    def step(self) -> None:
+        """One engine tick: admit, decode one token for every live slot."""
+        self._admit()
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not live:
+            return
+        # decode with cache_len = max live length (validity masks keep
+        # shorter slots correct: their pad positions were zero-filled and
+        # masked by position <= len)
+        self.cache["len"] = jnp.int32(int(self.slot_len[live].max()))
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self._tick_tokens())
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i in live:
+            req = self.slot_req[i]
+            req.generated.append(int(nxt[i]))
+            self.slot_len[i] += 1
+            if (len(req.generated) >= req.max_new_tokens
+                    or int(nxt[i]) == self.eos_id
+                    or self.slot_len[i] >= self.max_len - 1):
+                req.done = True
+                self.slot_req[i] = None
+
+    def run_until_drained(self, max_ticks: int = 1000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                return
+            self.step()

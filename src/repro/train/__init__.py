@@ -1,0 +1,7 @@
+from repro.train.optimizer import AdamW, AdamWState, warmup_cosine, constant_lr
+from repro.train.train_step import (make_train_step, shard_train_step,
+                                    make_state_shardings, make_batch_shardings)
+from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
+                                    latest_step, prune_checkpoints)
+from repro.train.fault_tolerance import (WatchdogPolicy, plan_remesh,
+                                         run_with_recovery, StepFailure)

@@ -1,0 +1,82 @@
+"""AdamW + schedules, built from scratch (no optax in this environment).
+
+State layout mirrors the parameter tree (same shapes, fp32 moments), so the
+optimizer state inherits the parameter sharding rules verbatim — m/v for an
+FSDP-sharded weight are FSDP-sharded, giving ZeRO-style optimizer sharding
+for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # scalar int32
+    m: Any                     # fp32 tree
+    v: Any                     # fp32 tree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree_util.tree_map(zeros, params),
+                          v=jax.tree_util.tree_map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+        step = state.step + 1
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g)
+                             for g in jax.tree_util.tree_leaves(g32)))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+        g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+
+        m = jax.tree_util.tree_map(
+            lambda mm, g: self.b1 * mm + (1 - self.b1) * g, state.m, g32)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: self.b2 * vv + (1 - self.b2) * g * g, state.v, g32)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:                        # decoupled WD on matrices
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, AdamWState(step=step, m=m, v=v), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+def warmup_cosine(peak: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, cos)
+    return schedule
+
+
+def constant_lr(value: float) -> Callable:
+    return lambda step: jnp.full((), value, jnp.float32)

@@ -1,0 +1,119 @@
+"""The jitted training step + its sharding contract.
+
+``make_train_step`` builds the (params, opt_state, batch) → (params',
+opt_state', metrics) function; ``shard_train_step`` wraps it with explicit
+in/out shardings for a mesh (the object the dry-run lowers and the launcher
+runs).  Gradient all-reduces over data/pod axes are inserted by GSPMD from
+the sharding contract — the cross-pod axis only ever carries gradients.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.models import Model, param_pspecs
+from repro.train.optimizer import AdamW, AdamWState
+
+
+def make_train_step(model: Model, opt: AdamW, *, kv_chunk: int = 2048,
+                    microbatches: int = 1) -> Callable:
+    """(params, opt_state, batch) → (params', opt_state', metrics).
+
+    microbatches > 1 enables gradient accumulation: the global batch is
+    split along dim 0 and scanned, bounding in-flight activations to one
+    microbatch (mandatory for the ≥70B train cells at 16 GB/chip).
+    """
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch, kv_chunk=kv_chunk)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def micro(carry, mb):
+                loss_acc, grad_acc = carry
+                if model.mesh is not None:
+                    mb = jax.tree_util.tree_map(
+                        lambda x: jax.lax.with_sharding_constraint(
+                            x, NamedSharding(model.mesh,
+                                             batch_pspec(model.mesh,
+                                                         x.ndim - 1))),
+                        mb)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                grad_acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32), grad_acc, g)
+                return (loss_acc + l, grad_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            # honour the dry-run cost-compile unroll flag: a rolled µ-scan
+            # is counted once by XLA cost analysis (see dryrun.py)
+            from repro.models.layers import INNER_SCAN_UNROLL
+            (loss_sum, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zeros), split,
+                unroll=INNER_SCAN_UNROLL or 1)
+            loss = loss_sum / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        new_params, new_state, stats = opt.update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss, **stats}
+    return train_step
+
+
+def batch_pspec(mesh, extra_dims: int = 1) -> PS:
+    """Batch arrays shard their leading dim over every non-model axis."""
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return PS(axes, *([None] * extra_dims))
+
+
+def make_batch_shardings(mesh, batch_tree):
+    import numpy as np
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_batch = int(np.prod([sizes[a] for a in mesh.axis_names if a != "model"]))
+
+    def one(x):
+        if x.shape and x.shape[0] % n_batch == 0:
+            return NamedSharding(mesh, batch_pspec(mesh, x.ndim - 1))
+        return NamedSharding(mesh, PS())          # e.g. global_batch=1 decode
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def make_state_shardings(mesh, model: Model):
+    """NamedShardings for (params, opt_state) from the logical-axis rules."""
+    infos = model.infos()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pspecs = param_pspecs(infos, sizes)
+    p_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+    opt_shard = AdamWState(
+        step=NamedSharding(mesh, PS()),
+        m=p_shard, v=p_shard)
+    return p_shard, opt_shard
+
+
+def shard_train_step(model: Model, opt: AdamW, mesh, batch_shapes,
+                     *, kv_chunk: int = 2048, donate: bool = True,
+                     microbatches: int = 1):
+    """jit(train_step) with the full sharding contract attached.
+
+    batch_shapes: pytree of ShapeDtypeStruct for one global batch.
+    Returns (jitted_fn, (param_shardings, opt_shardings, batch_shardings)).
+    """
+    p_shard, o_shard = make_state_shardings(mesh, model)
+    b_shard = make_batch_shardings(mesh, batch_shapes)
+    fn = make_train_step(model, opt, kv_chunk=kv_chunk,
+                         microbatches=microbatches)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard,
+                       NamedSharding(mesh, PS())),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, (p_shard, o_shard, b_shard)

@@ -1,0 +1,3 @@
+from repro.utils.config import ClimberConfig, ModelConfig, ShapeConfig, SHAPES, get_shape
+
+__all__ = ["ClimberConfig", "ModelConfig", "ShapeConfig", "SHAPES", "get_shape"]

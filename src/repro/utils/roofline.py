@@ -1,0 +1,199 @@
+"""Roofline analysis from the compiled dry-run artifact (no real hardware).
+
+Three terms per (arch, shape, mesh) cell — all in seconds, per device:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16 v5e)
+  memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective = collective_bytes_per_device / link_bw    (~50 GB/s/link ICI)
+
+``compiled.cost_analysis()`` supplies flops and bytes (the partitioned,
+per-device module).  Collective bytes are NOT in cost_analysis: we parse the
+post-optimization HLO text and sum the shaped-buffer sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Size of one shaped buffer like ``bf16[8,2048,512]``."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def _result_bytes(line: str, op: str) -> int:
+    """Bytes of an HLO instruction's result.
+
+    Handles tuple results (async ``-start`` ops carry (operand, result, ...)
+    tuples — we take the largest member, the actual payload, to avoid
+    double-counting the alias slots).
+    """
+    rhs = line.split("=", 1)[1] if "=" in line else line
+    # everything before the op keyword is the result type annotation
+    pos = rhs.find(f" {op}")
+    head = rhs[:pos] if pos >= 0 else rhs.split("(", 1)[0]
+    sizes = []
+    for m in _SHAPE_RE.finditer(head):
+        dt, dims = m.groups()
+        b = _DTYPE_BYTES.get(dt, 0)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes.append(n * b)
+    if not sizes:
+        return 0
+    is_start = f"{op}-start(" in rhs
+    return max(sizes) if (is_start and len(sizes) > 1) else sum(sizes)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind result bytes of every collective in the HLO."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        rhs = ls.split("=", 1)[1]
+        for op in _COLLECTIVE_OPS:
+            # match op name at the call position: "... = TYPE op-name("
+            if re.search(rf"\b{op}(?:-start)?\(", rhs):
+                # count -start, skip -done (avoid double counting pairs)
+                if f"{op}-done(" in rhs:
+                    break
+                out[op] += _result_bytes(ls, op)
+                break
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    model_flops_per_device: float = 0.0
+    peak_memory_bytes: float = 0.0
+    # decode cells: the useful work is reading weights+cache once per token;
+    # utilization is bandwidth-based, not flops-based.
+    model_bytes_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        if self.flops_per_device <= 0:
+            return 0.0
+        return self.model_flops_per_device / self.flops_per_device
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-work time / dominant-term time: how close the step is to
+        the hardware limit that binds it.  Useful work = model FLOPs for
+        compute-shaped steps, or the one mandatory weights+cache read for
+        decode-shaped steps — whichever gives the higher (fairer) bound."""
+        if self.bound_s <= 0:
+            return 0.0
+        useful_s = max(self.model_flops_per_device / PEAK_FLOPS,
+                       self.model_bytes_per_device / HBM_BW)
+        return useful_s / self.bound_s
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops_per_device": self.model_flops_per_device,
+            "model_bytes_per_device": self.model_bytes_per_device,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(num_params: int, tokens: int, kind: str,
+                active_params: Optional[int] = None) -> float:
+    """6·N·D for training, 2·N·D for inference (per forward token)."""
+    n = active_params if active_params is not None else num_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def analyze(arch: str, shape: str, mesh_name: str, compiled,
+            *, model_flops_total: float, num_devices: int) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = compiled.memory_analysis()
+    peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                 + getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "output_size_in_bytes", 0))
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        coll_bytes_per_device=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops_per_device=model_flops_total / num_devices,
+        peak_memory_bytes=peak,
+    )

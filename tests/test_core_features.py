@@ -1,0 +1,184 @@
+"""Unit tests for CLIMBER-FX: PAA, P4 signatures, distance metrics.
+
+Includes exact reproductions of the paper's worked examples (Def. 7 example,
+Example 1 of §IV-C).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (assign_groups, decay_weights, euclidean,
+                        overlap_distance, paa, pivot_distances,
+                        rank_signature, set_onehot, set_signature,
+                        squared_l2_pairwise, total_weight, weight_distance,
+                        weighted_onehot, znormalize)
+
+
+class TestPAA:
+    def test_matches_manual_means(self):
+        x = jnp.arange(12.0)
+        out = paa(x, 4)
+        np.testing.assert_allclose(out, [1.0, 4.0, 7.0, 10.0])
+
+    def test_batched(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (5, 7, 64))
+        out = paa(x, 8)
+        assert out.shape == (5, 7, 8)
+        ref = np.asarray(x).reshape(5, 7, 8, 8).mean(-1)
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-6)
+
+    def test_indivisible_raises(self):
+        with pytest.raises(ValueError):
+            paa(jnp.zeros(10), 4)
+
+    def test_znormalize(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 100)) * 5 + 2
+        z = znormalize(x)
+        np.testing.assert_allclose(np.asarray(z.mean(-1)), 0.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(z.std(-1)), 1.0, atol=1e-3)
+
+
+class TestSignatures:
+    def test_rank_signature_matches_argsort(self):
+        key = jax.random.PRNGKey(2)
+        x = jax.random.normal(key, (32, 8))
+        pivots = jax.random.normal(jax.random.PRNGKey(3), (16, 8))
+        p4 = np.asarray(rank_signature(x, pivots, 5))
+        d = np.asarray(pivot_distances(x, pivots))
+        ref = np.argsort(d, axis=-1, kind="stable")[:, :5]
+        np.testing.assert_array_equal(p4, ref)
+
+    def test_set_signature_sorted(self):
+        p4r = jnp.array([[3, 1, 2], [7, 0, 5]])
+        np.testing.assert_array_equal(np.asarray(set_signature(p4r)),
+                                      [[1, 2, 3], [0, 5, 7]])
+
+    def test_set_onehot(self):
+        oh = np.asarray(set_onehot(jnp.array([[1, 3]]), 5))
+        np.testing.assert_array_equal(oh, [[0, 1, 0, 1, 0]])
+
+    def test_decay_weights_exp(self):
+        w = np.asarray(decay_weights(4, "exp", 0.5))
+        np.testing.assert_allclose(w, [1.0, 0.5, 0.25, 0.125])
+
+    def test_decay_weights_linear(self):
+        w = np.asarray(decay_weights(4, "linear"))
+        np.testing.assert_allclose(w, [1.0, 0.75, 0.5, 0.25])
+
+    def test_decay_monotone(self):
+        for kind in ("exp", "linear"):
+            w = np.asarray(decay_weights(10, kind, 0.7))
+            assert np.all(np.diff(w) < 0), "Def. 9 requires strict decay"
+
+    def test_weighted_onehot(self):
+        w = decay_weights(3, "exp", 0.5)
+        woh = np.asarray(weighted_onehot(jnp.array([[4, 1, 2]]), 6, w))
+        np.testing.assert_allclose(woh, [[0, 0.5, 0.25, 0, 1.0, 0]])
+
+
+class TestDistances:
+    def test_overlap_distance_paper_example(self):
+        # Paper, below Def. 7: X=<1,3,6,8>, Y=<2,3,4,6> => OD = 4-2 = 2
+        r, m = 10, 4
+        x = set_onehot(jnp.array([[1, 3, 6, 8]]), r)
+        y = set_onehot(jnp.array([[2, 3, 4, 6]]), r)
+        od = np.asarray(overlap_distance(x, y, m))
+        assert od[0, 0] == 2
+
+    def test_od_range_and_identity(self):
+        r, m = 16, 5
+        key = jax.random.PRNGKey(4)
+        sig = jax.random.choice(key, r, shape=(20, m), replace=False, axis=0) \
+            if False else jnp.stack([
+                jax.random.permutation(jax.random.PRNGKey(i), r)[:m]
+                for i in range(20)])
+        oh = set_onehot(sig, r)
+        od = np.asarray(overlap_distance(oh, oh, m))
+        assert np.all(od >= 0) and np.all(od <= m)
+        np.testing.assert_allclose(np.diag(od), 0.0)     # identity
+        np.testing.assert_allclose(od, od.T)             # symmetry
+
+    def test_euclidean(self):
+        x = jnp.array([0.0, 3.0])
+        y = jnp.array([4.0, 0.0])
+        assert float(euclidean(x, y)) == 5.0
+
+    def test_pairwise_matches_direct(self):
+        q = jax.random.normal(jax.random.PRNGKey(5), (4, 32))
+        d = jax.random.normal(jax.random.PRNGKey(6), (9, 32))
+        got = np.asarray(squared_l2_pairwise(q, d))
+        ref = ((np.asarray(q)[:, None] - np.asarray(d)[None]) ** 2).sum(-1)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=1e-4)
+
+
+class TestPaperExample1:
+    """Example 1 (§IV-C): exact group-assignment reproduction."""
+
+    def setup_method(self):
+        # centroids o1=<1,2,3>, o2=<2,4,5>; fall-back row 0
+        self.r, self.m = 8, 3
+        c = np.zeros((3, self.r), dtype=np.float32)
+        c[1, [1, 2, 3]] = 1.0
+        c[2, [2, 4, 5]] = 1.0
+        self.c = jnp.asarray(c)
+
+    def test_assignments(self):
+        p4r = jnp.array([
+            [3, 4, 1],   # X -> G1 (unique smallest OD)
+            [4, 2, 1],   # Y -> G2 (WD tie-break: 0.25 < 1.0)
+            [6, 2, 7],   # Z -> WD tie again -> deterministic lowest = G1
+        ])
+        grp = np.asarray(assign_groups(p4r, self.c, self.r,
+                                       decay="exp", decay_lambda=0.5))
+        assert grp[0] == 1
+        assert grp[1] == 2
+        assert grp[2] == 1   # paper: random among {G1, G2}; we take lowest
+
+    def test_wd_values_match_paper(self):
+        w = decay_weights(self.m, "exp", 0.5)
+        tw = total_weight(w)
+        assert float(tw) == pytest.approx(1.75)
+        y_w = weighted_onehot(jnp.array([[4, 2, 1]]), self.r, w)
+        wd = np.asarray(weight_distance(y_w, self.c, tw))[0]
+        assert wd[1] == pytest.approx(1.0)    # WD(Y, G1.o1) = 1
+        assert wd[2] == pytest.approx(0.25)   # WD(Y, G2.o2) = 0.25
+        z_w = weighted_onehot(jnp.array([[6, 2, 7]]), self.r, w)
+        wdz = np.asarray(weight_distance(z_w, self.c, tw))[0]
+        assert wdz[1] == pytest.approx(1.25) and wdz[2] == pytest.approx(1.25)
+
+    def test_no_overlap_goes_to_fallback(self):
+        p4r = jnp.array([[6, 7, 0]])   # zero overlap with o1 and o2
+        grp = np.asarray(assign_groups(p4r, self.c, self.r))
+        assert grp[0] == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 12), st.integers(16, 64), st.integers(0, 2**31 - 1))
+def test_property_od_equals_set_formula(m, r, seed):
+    """Property: OD == m − |intersection| for random prefix signatures."""
+    rng = np.random.default_rng(seed)
+    a = rng.choice(r, size=m, replace=False)
+    b = rng.choice(r, size=m, replace=False)
+    oh_a = set_onehot(jnp.asarray(a)[None], r)
+    oh_b = set_onehot(jnp.asarray(b)[None], r)
+    od = float(np.asarray(overlap_distance(oh_a, oh_b, m))[0, 0])
+    assert od == m - len(set(a) & set(b))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 64))
+def test_property_rank_signature_is_prefix_of_ranking(m, seed):
+    """Property: P4→ is always the m nearest pivots in ascending distance."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, 8)).astype(np.float32))
+    pv = jnp.asarray(rng.normal(size=(m + 8, 8)).astype(np.float32))
+    p4 = np.asarray(rank_signature(x, pv, m))
+    d = np.asarray(pivot_distances(x, pv))
+    for i in range(3):
+        dd = d[i][p4[i]]
+        assert np.all(np.diff(dd) >= -1e-6)              # ascending
+        worst = dd[-1]
+        others = np.delete(d[i], p4[i])
+        assert np.all(others >= worst - 1e-6)            # truly the m nearest

@@ -1,0 +1,240 @@
+"""Tests for CLIMBER-INX: Algorithm 2, trie/packing, routing, store, queries."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClimberIndex, TrieDevice, assign_groups, build_forest,
+                        build_index, compute_centroids, descend, ffd_pack,
+                        knn_query, route_records, squared_l2_pairwise)
+from repro.data import make_dataset, make_queries
+from repro.utils.config import ClimberConfig
+
+
+# ----------------------------------------------------------------------
+# Algorithm 2 — centroid computation
+# ----------------------------------------------------------------------
+class TestCentroids:
+    def test_highest_freq_first_and_spread(self):
+        # 3 signature patterns; the most frequent must be centroid #1
+        sigs = np.array([[0, 1, 2]] * 50 + [[0, 1, 3]] * 30 + [[5, 6, 7]] * 20,
+                        dtype=np.int32)
+        cs = compute_centroids(sigs, 10, sample_frac=1.0, capacity=5, min_od=2)
+        # row 0 fallback; row 1 must be the most frequent signature
+        np.testing.assert_array_equal(cs.sigs[1], [0, 1, 2])
+        # [0,1,3] has OD=1 from [0,1,2] < eps=2 -> skipped; [5,6,7] admitted
+        assert any((cs.sigs[i] == [5, 6, 7]).all() for i in range(1, cs.num_groups))
+        assert not any((cs.sigs[i] == [0, 1, 3]).all()
+                       for i in range(1, cs.num_groups))
+
+    def test_tiny_group_stop(self):
+        sigs = np.array([[0, 1, 2]] * 100 + [[4, 5, 6]] * 1, dtype=np.int32)
+        cs = compute_centroids(sigs, 10, sample_frac=1.0, capacity=50, min_od=2)
+        # the singleton signature estimate (1 + remaining/2) << 50 -> stop
+        assert cs.num_groups == 2  # fallback + 1
+
+    def test_max_centroids_cap(self):
+        rng = np.random.default_rng(0)
+        sigs = np.stack([rng.choice(64, 4, replace=False) for _ in range(500)])
+        sigs = np.sort(sigs.astype(np.int32), axis=-1)
+        cs = compute_centroids(sigs, 64, sample_frac=1.0, capacity=1,
+                               min_od=1, max_centroids=5)
+        assert cs.num_groups <= 6
+
+    def test_fallback_row_zero_is_empty(self):
+        sigs = np.array([[0, 1, 2]] * 10, dtype=np.int32)
+        cs = compute_centroids(sigs, 10, sample_frac=1.0, capacity=1)
+        assert cs.onehot[0].sum() == 0
+
+
+# ----------------------------------------------------------------------
+# FFD packing (Def. 13)
+# ----------------------------------------------------------------------
+class TestPacking:
+    def test_simple(self):
+        assign, nbins = ffd_pack([3, 3, 2, 2], 5)
+        assert nbins == 2
+        loads = np.bincount(assign, weights=[3, 3, 2, 2])
+        assert np.all(loads <= 5)
+
+    def test_oversize_gets_own_bin(self):
+        assign, nbins = ffd_pack([10, 1], 5)
+        assert nbins == 2
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(0.1, 10.0), min_size=1, max_size=40),
+           st.floats(1.0, 20.0))
+    def test_property_capacity_and_bound(self, sizes, cap):
+        assign, nbins = ffd_pack(sizes, cap)
+        assert np.all(np.asarray(assign) >= 0)
+        loads = np.zeros(nbins)
+        for s, b in zip(sizes, assign):
+            loads[b] += s
+        for b in range(nbins):
+            members = [s for s, a in zip(sizes, assign) if a == b]
+            # capacity holds unless the bin is a single oversized item
+            assert loads[b] <= cap + 1e-9 or len(members) == 1
+        # FFD guarantee: nbins <= 1.5 * OPT + 1 <= 1.5 * (lower bound) + 1
+        # where a valid lower bound is ceil(sum(fitting items)/cap) + #oversized
+        oversized = sum(1 for s in sizes if s > cap)
+        fitting = sum(s for s in sizes if s <= cap)
+        lb = oversized + int(np.ceil(fitting / cap))
+        assert nbins <= max(1.5 * lb + 1, lb)
+
+
+# ----------------------------------------------------------------------
+# Trie construction + vectorised descent
+# ----------------------------------------------------------------------
+def _small_forest():
+    rng = np.random.default_rng(7)
+    m, r = 4, 12
+    sigs = np.stack([rng.choice(r, m, replace=False) for _ in range(200)]).astype(np.int32)
+    freqs = rng.integers(1, 20, size=200)
+    groups = rng.integers(0, 3, size=200)
+    forest = build_forest(sigs, freqs, groups, 3, r, capacity=100.0,
+                          sample_frac=1.0)
+    return forest, sigs, freqs, groups, m, r
+
+
+class TestTrie:
+    def test_leaf_capacity_or_depth(self):
+        forest, sigs, freqs, groups, m, r = _small_forest()
+        is_leaf = np.diff(forest.child_start) == 0
+        for nid in np.nonzero(is_leaf)[0]:
+            assert (forest.node_size[nid] <= 100.0
+                    or forest.node_depth[nid] == m)
+
+    def test_dfs_intervals_nested(self):
+        forest, *_ = _small_forest()
+        for e in range(len(forest.edge_child)):
+            child = forest.edge_child[e]
+            # find parent by scanning child_start ranges
+            parent = np.searchsorted(forest.child_start, e, side="right") - 1
+            assert forest.dfs_in[parent] <= forest.dfs_in[child]
+            assert forest.dfs_out[child] <= forest.dfs_out[parent]
+
+    def test_descend_matches_python_walk(self):
+        forest, sigs, freqs, groups, m, r = _small_forest()
+        trie = TrieDevice.from_forest(forest)
+        node, pathlen, parent = descend(trie, jnp.asarray(sigs),
+                                        jnp.asarray(groups))
+        node, pathlen = np.asarray(node), np.asarray(pathlen)
+
+        # python reference walk over the CSR structure
+        for i in range(len(sigs)):
+            cur = forest.group_root[groups[i]]
+            depth = 0
+            for d in range(m):
+                lo, hi = forest.child_start[cur], forest.child_start[cur + 1]
+                edges = dict(zip(forest.edge_pivot[lo:hi],
+                                 forest.edge_child[lo:hi]))
+                nxt = edges.get(sigs[i][d])
+                if nxt is None:
+                    break
+                cur = nxt
+                depth += 1
+            assert node[i] == cur, f"row {i}"
+            assert pathlen[i] == depth
+
+    def test_route_records_leaf_vs_default(self):
+        forest, sigs, freqs, groups, m, r = _small_forest()
+        trie = TrieDevice.from_forest(forest)
+        part, rec_dfs = route_records(trie, jnp.asarray(sigs),
+                                      jnp.asarray(groups))
+        part = np.asarray(part)
+        assert np.all(part >= 0) and np.all(part < forest.num_partitions)
+        # every group's partitions must be disjoint across groups
+        # (partition ids are allocated per group, monotonically)
+        for g in range(3):
+            mask = groups == g
+            gparts = set(part[mask])
+            for g2 in range(g + 1, 3):
+                assert gparts.isdisjoint(set(part[groups == g2]))
+
+
+# ----------------------------------------------------------------------
+# End-to-end index + query
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_index():
+    cfg = ClimberConfig(series_len=128, paa_segments=16, num_pivots=48,
+                        prefix_len=6, capacity=256, sample_frac=0.2,
+                        max_centroids=24, k=20, candidate_groups=4,
+                        adaptive_factor=4)
+    data = make_dataset("randomwalk", jax.random.PRNGKey(0), 6000, 128)
+    index = build_index(jax.random.PRNGKey(1), data, cfg)
+    return index, data
+
+
+class TestIndexQuery:
+    def test_store_holds_every_record_once(self, small_index):
+        index, data = small_index
+        gids = np.asarray(index.store.rec_gid).ravel()
+        live = np.sort(gids[gids >= 0])
+        np.testing.assert_array_equal(live, np.arange(data.shape[0]))
+
+    def test_partition_counts(self, small_index):
+        index, _ = small_index
+        counts = np.asarray(index.store.count)
+        per_gid = (np.asarray(index.store.rec_gid) >= 0).sum(axis=1)
+        np.testing.assert_array_equal(counts, per_gid)
+
+    def test_self_query_finds_itself(self, small_index):
+        index, data = small_index
+        q = data[:8]
+        dist, gid, _ = knn_query(index, q, 5, variant="adaptive")
+        gid = np.asarray(gid)
+        dist = np.asarray(dist)
+        for i in range(8):
+            assert i in gid[i], "a dataset member must retrieve itself"
+            pos = list(gid[i]).index(i)
+            # float32 |a|^2-2ab+|b|^2 cancellation => O(1e-2) absolute floor
+            assert dist[i][pos] == pytest.approx(0.0, abs=5e-2)
+
+    def test_recall_ladder(self, small_index):
+        """adaptive >= knn and od_smallest >= adaptive (more data scanned)."""
+        index, data = small_index
+        q = make_queries(jax.random.PRNGKey(3), data, 24)
+        gt = np.argsort(np.asarray(squared_l2_pairwise(q, data)), axis=1)[:, :20]
+        recalls = {}
+        touched = {}
+        for v in ("knn", "adaptive", "od_smallest"):
+            _, gid, plan = knn_query(index, q, 20, variant=v)
+            gid = np.asarray(gid)
+            recalls[v] = np.mean([
+                len(set(gid[i][gid[i] >= 0]) & set(gt[i])) / 20
+                for i in range(len(q))])
+            touched[v] = float(np.asarray(plan.partitions_touched()).mean())
+        assert recalls["adaptive"] >= recalls["knn"] - 1e-9
+        assert recalls["od_smallest"] >= recalls["adaptive"] - 0.05
+        assert recalls["adaptive"] > 0.25, recalls
+        # OD-smallest must touch at least as many partitions
+        assert touched["od_smallest"] >= touched["adaptive"] - 1e-9
+
+    def test_results_sorted_and_valid(self, small_index):
+        index, data = small_index
+        q = make_queries(jax.random.PRNGKey(5), data, 10)
+        dist, gid, _ = knn_query(index, q, 20)
+        dist, gid = np.asarray(dist), np.asarray(gid)
+        for i in range(10):
+            live = gid[i] >= 0
+            d = dist[i][live]
+            assert np.all(np.diff(d) >= -1e-5), "ascending ED required"
+            ids = gid[i][live]
+            assert len(set(ids)) == len(ids), "no duplicate answers"
+
+    def test_exact_distances(self, small_index):
+        """Refine must return true ED, not an approximation."""
+        index, data = small_index
+        q = make_queries(jax.random.PRNGKey(7), data, 4)
+        dist, gid, _ = knn_query(index, q, 10)
+        dist, gid = np.asarray(dist), np.asarray(gid)
+        data_np = np.asarray(data)
+        qn = np.asarray(q)
+        for i in range(4):
+            for j in range(10):
+                if gid[i, j] >= 0:
+                    true = np.linalg.norm(qn[i] - data_np[gid[i, j]])
+                    # float32 norm-trick cancellation => absolute floor ~1e-2
+                    assert dist[i, j] == pytest.approx(true, rel=5e-3, abs=2e-2)

@@ -1,0 +1,120 @@
+"""System-invariant property tests (hypothesis) across both planes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_index, knn_query
+from repro.core.query import compact_plan, plan_adaptive
+from repro.data import make_dataset
+from repro.models import layers as L
+from repro.utils.config import ClimberConfig
+
+
+@pytest.fixture(scope="module")
+def tiny_index():
+    cfg = ClimberConfig(series_len=64, paa_segments=8, num_pivots=32,
+                        prefix_len=5, capacity=128, sample_frac=0.3,
+                        max_centroids=12, k=10, candidate_groups=4,
+                        adaptive_factor=4)
+    data = make_dataset("randomwalk", jax.random.PRNGKey(0), 3000, 64)
+    return build_index(jax.random.PRNGKey(1), data, cfg), data
+
+
+class TestIndexInvariants:
+    def test_full_coverage(self, tiny_index):
+        """Every record lands in exactly one partition (Def. 12: disjoint +
+        full coverage)."""
+        index, data = tiny_index
+        gids = np.asarray(index.store.rec_gid).ravel()
+        live = gids[gids >= 0]
+        assert len(live) == data.shape[0]
+        assert len(set(live)) == data.shape[0]
+
+    def test_dfs_tags_within_group_intervals(self, tiny_index):
+        """A record's DFS tag must lie inside its group root's interval."""
+        index, _ = tiny_index
+        f = index.forest
+        part_group = np.zeros(f.num_partitions, dtype=int)
+        for g in range(len(f.group_root)):
+            root = f.group_root[g]
+            for pid in f.node_partitions(root):
+                part_group[pid] = g
+        rec_dfs = np.asarray(index.store.rec_dfs)
+        for pid in range(f.num_partitions):
+            g = part_group[pid]
+            root = f.group_root[g]
+            tags = rec_dfs[pid][rec_dfs[pid] >= 0]
+            assert np.all(tags >= f.dfs_in[root])
+            assert np.all(tags < f.dfs_out[root])
+
+    def test_compact_plan_lossless(self, tiny_index):
+        """compact_plan must preserve the query answers when the slot budget
+        covers the real entries (the production query path relies on it)."""
+        index, data = tiny_index
+        q = data[:6]
+        p4r, _ = index.featurize(q)
+        plan = plan_adaptive(index, p4r)
+        budget = int(np.asarray((plan.sel_part >= 0).sum(axis=-1)).max())
+        cp = compact_plan(plan, max_slots=budget)
+        from repro.core.refine import refine
+        d1, g1 = refine(index.store, q, plan.sel_part, plan.sel_lo,
+                        plan.sel_hi, 10)
+        d2, g2 = refine(index.store, q, cp.sel_part, cp.sel_lo, cp.sel_hi, 10)
+        np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
+class TestLayerInvariants:
+    def test_cache_write_modes_equivalent(self):
+        """DUS vs masked one-hot cache writes must be bit-identical."""
+        cache = jnp.zeros((2, 16, 4, 8), jnp.bfloat16)
+        new = jnp.ones((2, 1, 4, 8), jnp.float32) * 3
+        pos = jnp.int32(5)
+        a = L._cache_write(cache, new, pos)
+        L.set_cache_update_masked(True)
+        try:
+            b = L._cache_write(cache, new, pos)
+        finally:
+            L.set_cache_update_masked(False)
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
+    def test_flash_matches_naive_softmax(self, seed, g):
+        """Chunked online softmax == naive attention, any GQA group size."""
+        key = jax.random.PRNGKey(seed)
+        kq, kk, kv = jax.random.split(key, 3)
+        b, sq, kvh, hd = 2, 8, 2, 16
+        h = kvh * g
+        q = jax.random.normal(kq, (b, sq, h, hd), jnp.float32)
+        k = jax.random.normal(kk, (b, sq, kvh, hd), jnp.float32)
+        v = jax.random.normal(kv, (b, sq, kvh, hd), jnp.float32)
+        out = L.flash_attention(q, k, v, causal=True, kv_chunk=4)
+
+        k_e = jnp.repeat(k, g, axis=2)
+        v_e = jnp.repeat(v, g, axis=2)
+        s = jnp.einsum("bqhd,bchd->bqhc", q * hd ** -0.5, k_e)
+        mask = jnp.tril(jnp.ones((sq, sq), bool))
+        s = jnp.where(mask[None, :, None, :], s, -1e30)
+        ref = jnp.einsum("bqhc,bchd->bqhd", jax.nn.softmax(s, axis=-1), v_e)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_flash_bf16_close_to_f32(self):
+        key = jax.random.PRNGKey(3)
+        q = jax.random.normal(key, (2, 16, 4, 16), jnp.bfloat16)
+        k = jax.random.normal(jax.random.PRNGKey(4), (2, 16, 2, 16),
+                              jnp.bfloat16)
+        v = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 2, 16),
+                              jnp.bfloat16)
+        a = L.flash_attention(q, k, v, causal=True, kv_chunk=8)
+        L.set_flash_bf16(True)
+        try:
+            b = L.flash_attention(q, k, v, causal=True, kv_chunk=8)
+        finally:
+            L.set_flash_bf16(False)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=5e-2)

@@ -1,0 +1,130 @@
+"""Per-kernel validation: shape/dtype sweeps against the ref.py oracles.
+
+All kernels run in interpret mode on CPU (the exact TPU kernel bodies,
+executed via the Pallas interpreter).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.l2 import pairwise_l2, qdots
+from repro.kernels.paa_kernel import paa as paa_kernel
+from repro.kernels.pivot_rank import pivot_rank
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+class TestPairwiseL2:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("q,c,n", [
+        (1, 1, 8), (7, 13, 32), (64, 200, 128), (33, 511, 256), (128, 512, 64),
+    ])
+    def test_sweep(self, q, c, n, dtype):
+        kq, kx = jax.random.split(jax.random.PRNGKey(q * 1000 + c))
+        a = _rand(kq, (q, n), dtype)
+        b = _rand(kx, (c, n), dtype)
+        got = pairwise_l2(a, b, block_q=32, block_c=64, interpret=True)
+        want = ref.pairwise_l2_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+    def test_block_edges(self):
+        # shapes exactly at, below and above the block boundary
+        for q in (31, 32, 33):
+            a = _rand(jax.random.PRNGKey(0), (q, 16), jnp.float32)
+            b = _rand(jax.random.PRNGKey(1), (64, 16), jnp.float32)
+            got = pairwise_l2(a, b, block_q=32, block_c=32, interpret=True)
+            want = ref.pairwise_l2_ref(a, b)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=2e-4, atol=2e-4)
+
+
+class TestQDots:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("q,c,n", [(1, 4, 8), (5, 37, 64), (16, 256, 128)])
+    def test_sweep(self, q, c, n, dtype):
+        kq, kr = jax.random.split(jax.random.PRNGKey(c))
+        a = _rand(kq, (q, n), dtype)
+        rows = _rand(kr, (q, c, n), dtype)
+        got = qdots(a, rows, block_c=32, interpret=True)
+        want = ref.qdots_ref(a, rows)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+    def test_refine_path_matches_einsum(self):
+        q = _rand(jax.random.PRNGKey(2), (4, 32), jnp.float32)
+        rows = _rand(jax.random.PRNGKey(3), (4, 3, 17, 32), jnp.float32)
+        got = ops.batched_query_dots(q, rows)
+        want = jnp.einsum("qn,qmcn->qmc", q, rows)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestPAAKernel:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("b,n,w", [
+        (1, 16, 4), (100, 256, 16), (257, 128, 8), (64, 512, 32),
+    ])
+    def test_sweep(self, b, n, w, dtype):
+        x = _rand(jax.random.PRNGKey(b), (b, n), dtype)
+        got = paa_kernel(x, w, block_b=64, interpret=True)
+        want = ref.paa_ref(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+    def test_matches_core_paa(self):
+        from repro.core import paa as core_paa
+        x = _rand(jax.random.PRNGKey(9), (50, 128), jnp.float32)
+        np.testing.assert_allclose(np.asarray(paa_kernel(x, 16, interpret=True)),
+                                   np.asarray(core_paa(x, 16)),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestPivotRank:
+    @pytest.mark.parametrize("dtype", [jnp.float32])
+    @pytest.mark.parametrize("b,r,w,m", [
+        (1, 8, 4, 3), (33, 48, 16, 6), (128, 200, 16, 10), (64, 100, 8, 20),
+    ])
+    def test_sweep(self, b, r, w, m, dtype):
+        kx, kp = jax.random.split(jax.random.PRNGKey(b * 7 + r))
+        x = _rand(kx, (b, w), dtype)
+        p = _rand(kp, (r, w), dtype)
+        got = pivot_rank(x, p, m, block_b=32, interpret=True)
+        want = ref.pivot_rank_ref(x, p, m)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_core_rank_signature(self):
+        from repro.core import rank_signature
+        x = _rand(jax.random.PRNGKey(4), (64, 16), jnp.float32)
+        p = _rand(jax.random.PRNGKey(5), (48, 16), jnp.float32)
+        got = pivot_rank(x, p, 6, interpret=True)
+        want = rank_signature(x, p, 6)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_duplicate_pivot_tiebreak(self):
+        """Two identical pivots: lower id must win, matching top_k."""
+        x = jnp.zeros((4, 8), jnp.float32)
+        p = jnp.ones((6, 8), jnp.float32)
+        got = np.asarray(pivot_rank(x, p, 3, interpret=True))
+        np.testing.assert_array_equal(got, np.tile([0, 1, 2], (4, 1)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 50), st.integers(1, 6))
+def test_property_l2_nonnegative_and_symmetric_diag(q, c, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (q, 16))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 99), (c, 16))
+    d = np.asarray(pairwise_l2(a, b, block_q=16, block_c=16, interpret=True))
+    assert np.all(d >= 0.0)
+    d_self = np.asarray(pairwise_l2(a, a, block_q=16, block_c=16, interpret=True))
+    assert np.all(np.abs(np.diag(d_self)) < 1e-3)

@@ -1,0 +1,125 @@
+"""Roofline machinery tests + a reduced-mesh dry-run integration test."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.utils.roofline import (RooflineReport, collective_bytes,
+                                  model_flops, _shape_bytes)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+class TestCollectiveParse:
+    HLO = """
+HloModule test
+fused_computation {
+  x = bf16[8,128]{1,0} parameter(0)
+  ROOT y = bf16[8,128]{1,0} add(x, x)
+}
+ENTRY main {
+  p0 = bf16[8,128]{1,0} parameter(0)
+  ag = bf16[128,128]{1,0} all-gather(p0), dimensions={0}
+  ar = f32[64]{0} all-reduce(something), to_apply=add
+  rs = f32[4,16]{1,0} reduce-scatter(ar2), dimensions={0}
+  cp = bf16[8,128]{1,0} collective-permute(p0)
+  ags = (bf16[256]{0}, bf16[256]{0}) all-gather-start(p1)
+  agd = bf16[256]{0} all-gather-done(ags)
+  consumer = bf16[128,128]{1,0} add(ag, ag)
+}
+"""
+
+    def test_counts_each_kind_once(self):
+        out = collective_bytes(self.HLO)
+        # plain ag result + the -start tuple's payload member (not the alias)
+        assert out["all-gather"] == 128 * 128 * 2 + 256 * 2
+        assert out["all-reduce"] == 64 * 4
+        assert out["reduce-scatter"] == 4 * 16 * 4
+        assert out["collective-permute"] == 8 * 128 * 2
+
+    def test_plain_ops_not_counted(self):
+        out = collective_bytes("ENTRY e {\n  a = f32[10]{0} add(x, y)\n}")
+        assert sum(out.values()) == 0
+
+    def test_shape_bytes(self):
+        assert _shape_bytes("bf16[2,3]") == 12
+        assert _shape_bytes("f32[]") == 4
+        assert _shape_bytes("s8[100]") == 100
+
+
+class TestRooflineReport:
+    def _report(self, **kw):
+        base = dict(arch="a", shape="s", mesh="m",
+                    flops_per_device=197e12,      # exactly 1s of compute
+                    bytes_per_device=819e9 / 2,   # 0.5s of memory
+                    coll_bytes_per_device=50e9 / 4,  # 0.25s of collective
+                    coll_breakdown={},
+                    model_flops_per_device=197e12 / 2)
+        base.update(kw)
+        return RooflineReport(**base)
+
+    def test_terms_and_bottleneck(self):
+        r = self._report()
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.memory_s == pytest.approx(0.5)
+        assert r.collective_s == pytest.approx(0.25)
+        assert r.bottleneck == "compute"
+        assert r.roofline_fraction == pytest.approx(0.5)
+
+    def test_decode_bandwidth_utility(self):
+        r = self._report(flops_per_device=1e9, model_flops_per_device=1e6,
+                         bytes_per_device=819e9,
+                         model_bytes_per_device=819e9 / 2)
+        assert r.bottleneck == "memory"
+        assert r.roofline_fraction == pytest.approx(0.5, rel=1e-3)
+
+    def test_model_flops(self):
+        assert model_flops(1e9, 100, "train") == 6e11
+        assert model_flops(1e9, 100, "serve") == 2e11
+        assert model_flops(1e9, 100, "serve", active_params=5e8) == 1e11
+
+
+@pytest.mark.slow
+class TestDryRunReduced:
+    """End-to-end dry-run semantics on a 16-virtual-device mesh (fast)."""
+
+    def test_lower_compile_and_analyze(self):
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+            import json, jax
+            import repro.launch.dryrun as DR
+            import repro.launch.mesh as MESH
+
+            # shrink the production mesh for the test
+            MESH.make_production_mesh = lambda multi_pod=False: \\
+                MESH.make_mesh((2, 2, 4) if multi_pod else (4, 4),
+                               ("pod", "data", "model") if multi_pod
+                               else ("data", "model"))
+            DR.make_production_mesh = MESH.make_production_mesh
+
+            res = DR.run_cell("internlm2-1.8b", "train_4k", multi_pod=False,
+                              kv_chunk=2048, verbose=False)
+            res_m = DR.run_cell("olmoe-1b-7b", "decode_32k", multi_pod=True,
+                                kv_chunk=2048, verbose=False, skip_cost=True)
+            print(json.dumps({"single": res["status"],
+                              "flops": res["flops_per_device"],
+                              "bottleneck": res["bottleneck"],
+                              "multi": res_m["status"]}))
+        """)
+        env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+        import os
+        env.update({k: v for k, v in os.environ.items()
+                    if k not in ("XLA_FLAGS",)})
+        env["PYTHONPATH"] = str(REPO / "src")
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, timeout=900, env=env)
+        assert r.returncode == 0, f"STDOUT:{r.stdout}\nSTDERR:{r.stderr[-3000:]}"
+        out = json.loads(r.stdout.strip().splitlines()[-1])
+        assert out["single"] == "ok" and out["multi"] == "ok"
+        assert out["flops"] > 1e11     # real per-device work was counted
+        assert out["bottleneck"] in ("compute", "memory", "collective")
