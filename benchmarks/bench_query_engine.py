@@ -1,0 +1,91 @@
+"""ClimberEngine throughput — batch size × planner variant × kernel on/off.
+
+The first queries/sec number for the repo: drives the batched serving
+engine over a synthetic RandomWalk index and sweeps the three levers the
+engine exposes — admission batch size {1, 8, 64}, planner variant
+(knn / adaptive), and the Pallas distance kernel.  Each cell reports
+throughput, mean partitions touched and mean candidates scanned; recall is
+reported once per variant (it is batch-invariant — the engine is
+bit-identical to per-query ``knn_query``).
+
+Besides the CSV rows, writes ``artifacts/BENCH_query_engine.json`` so the
+perf trajectory across PRs starts here.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import default_cfg, emit, standard_setup
+from repro.baselines import recall
+from repro.core import build_index
+from repro.serve import ClimberEngine, EngineStats
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+K = 20
+NUM_QUERIES = 64
+BATCH_SIZES = (1, 8, 64)
+VARIANTS = ("knn", "adaptive")
+# kernel interpret mode on CPU is orders of magnitude slower than jnp; sweep
+# it at a reduced query count so the suite stays minutes, not hours.
+KERNEL_QUERIES = 8
+KERNEL_BATCH_SIZES = (1, 8)
+
+
+def _measure(engine: ClimberEngine, queries: np.ndarray):
+    """(queries/sec, mean parts touched, mean candidates, gid) post-warmup."""
+    engine.run(queries[: engine.batch_size])       # compile, excluded
+    engine.stats = EngineStats()
+    _, gid, _ = engine.run(queries)
+    s = engine.stats
+    return (s.queries_per_sec, s.mean_partitions_touched,
+            s.mean_candidates_scanned, gid)
+
+
+def run() -> None:
+    data, queries, exact_ids = standard_setup(
+        "randomwalk", n=8_000, num_queries=NUM_QUERIES, k=K)
+    cfg = default_cfg(k=K)
+    index = build_index(jax.random.PRNGKey(7), data, cfg)
+    queries = np.asarray(queries)
+
+    cells = []
+    for variant in VARIANTS:
+        for use_kernel in (False, True):
+            q_sweep = queries if not use_kernel else queries[:KERNEL_QUERIES]
+            batches = BATCH_SIZES if not use_kernel else KERNEL_BATCH_SIZES
+            for bs in batches:
+                engine = ClimberEngine(index, batch_size=bs, variant=variant,
+                                       k=K, use_kernel=use_kernel)
+                qps, parts, cands, gid = _measure(engine, q_sweep)
+                r = recall(np.asarray(gid),
+                           np.asarray(exact_ids)[: len(q_sweep)])
+                tag = f"engine/{variant}/kernel{int(use_kernel)}/bs{bs}"
+                emit(tag, 1e6 / qps if qps else 0.0,
+                     f"qps={qps:.1f};parts={parts:.2f};recall={r:.3f}")
+                cells.append({
+                    "variant": variant, "use_kernel": use_kernel,
+                    "batch_size": bs, "queries_per_sec": round(qps, 2),
+                    "mean_partitions_touched": round(parts, 3),
+                    "mean_candidates_scanned": round(cands, 1),
+                    "recall": round(float(r), 4),
+                    "num_queries": int(len(q_sweep)), "k": K,
+                })
+
+    ART.mkdir(exist_ok=True)
+    out = ART / "BENCH_query_engine.json"
+    out.write_text(json.dumps({
+        "bench": "query_engine",
+        "dataset": {"name": "randomwalk", "n": 8_000,
+                    "series_len": cfg.series_len},
+        "cells": cells,
+    }, indent=2))
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

@@ -21,6 +21,8 @@ SUITES = {
     "fig12": ("benchmarks.bench_prefix_len", "Fig. 12 prefix-length sweep"),
     "table1": ("benchmarks.bench_memory_systems", "Table I memory-systems"),
     "kernels": ("benchmarks.bench_kernels", "Pallas kernel parity/µbench"),
+    "engine": ("benchmarks.bench_query_engine",
+               "ClimberEngine queries/sec sweep"),
     "roofline": ("benchmarks.roofline", "§Roofline table from dry-run"),
 }
 

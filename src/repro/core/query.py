@@ -16,18 +16,41 @@ Planner outputs are static-shape selections so the whole query path jits:
 
 All ladders follow Algorithm 3's tie-breaks: OD → WD → PathLen (desc) →
 node size (desc) → deterministic lowest id (paper: random among equals).
+
+Public planning API — registry + budget
+---------------------------------------
+
+Planners live in a registry keyed by variant name (:func:`register_planner`
+/ :func:`get_planner`; the three paper variants above are pre-registered,
+and e.g. the serving engine resolves variants purely by name).  The single
+public planning entry point is :func:`plan`, which runs the named planner
+and then **compacts** the plan to a static slot budget via
+:func:`compact_plan`: valid entries are moved to the front of the padded
+slot axis and the axis is sliced to the budget.  The default budget
+(:func:`default_slot_budget`) is the tightest bound that is provably
+lossless for the variant — e.g. the adaptive planner caps the partitions it
+reads at ``adaptive_factor ×`` what CLIMBER-kNN touches, so its budget is
+``min(2·T·maxP, maxP·adaptive_factor)`` while its raw plan is ``2·T·maxP``
+wide.  The refine gather costs Q×slots×cap×n bytes regardless of how many
+slots are real, so the budget — not the static worst case — is what scales
+memory.  Override with ``ClimberConfig.query_max_slots`` or the
+``max_slots=`` argument (smaller budgets trade recall for memory).
+
+:func:`knn_query` composes featurize → :func:`plan` →
+:func:`repro.core.refine.dispatch_refine`, so a ``mesh=`` argument is all it
+takes to execute the refine stage sharded over the data axis.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import assignment
-from repro.core.refine import refine as _refine
-from repro.core.index import ClimberIndex
+from repro.core.refine import dispatch_refine
+from repro.core.index import ClimberIndex, PartitionStore
 from repro.core.traversal import descend
 
 _BIG = jnp.float32(1e9)
@@ -45,16 +68,39 @@ class QueryPlan(NamedTuple):
     def partitions_touched(self) -> jnp.ndarray:
         """#distinct partitions accessed per query (benchmark metric)."""
         sp = jnp.sort(self.sel_part, axis=-1)
-        fresh = jnp.concatenate(
-            [sp[:, :1] >= 0,
-             (sp[:, 1:] != sp[:, :-1]) & (sp[:, 1:] >= 0)], axis=-1)
-        return jnp.sum(fresh, axis=-1)
+        return jnp.sum(_first_occurrence_mask(sp), axis=-1)
+
+
+def _first_occurrence_mask(sp_sorted: jnp.ndarray) -> jnp.ndarray:
+    """Mask of the first occurrence of each distinct non-pad id along the
+    sorted slot axis (shared by the distinct-partition metrics)."""
+    return jnp.concatenate(
+        [sp_sorted[:, :1] >= 0,
+         (sp_sorted[:, 1:] != sp_sorted[:, :-1]) & (sp_sorted[:, 1:] >= 0)],
+        axis=-1)
+
+
+def _num_candidates(index: ClimberIndex) -> int:
+    """T — candidate groups actually retained (static, bounded by #groups)."""
+    return min(index.cfg.candidate_groups, index.num_groups - 1) or 1
+
+
+def candidates_scanned(plan: QueryPlan, store: PartitionStore) -> jnp.ndarray:
+    """#records resident in the distinct partitions a query reads.
+
+    The per-query scan cost of the refine stage (serving-engine metric);
+    counts each selected partition once even when several plan entries
+    target different nodes of the same partition.
+    """
+    sp = jnp.sort(plan.sel_part, axis=-1)
+    cnt = store.count[jnp.maximum(sp, 0)]
+    return jnp.sum(jnp.where(_first_occurrence_mask(sp), cnt, 0), axis=-1)
 
 
 def _candidates(index: ClimberIndex, p4_rank_q: jnp.ndarray):
     """Top-T candidate groups by the (OD, WD) ladder + their trie descent."""
     cfg = index.cfg
-    t = min(cfg.candidate_groups, index.num_groups - 1) or 1
+    t = _num_candidates(index)
     od, wd = assignment.assignment_distances(
         p4_rank_q, index.centroid_onehot, cfg.num_pivots,
         decay=cfg.decay, decay_lambda=cfg.decay_lambda)
@@ -213,30 +259,116 @@ def compact_plan(plan: QueryPlan, max_slots: int) -> QueryPlan:
                      pathlen=plan.pathlen)
 
 
-_PLANNERS = {
-    "knn": plan_knn,
-    "adaptive": plan_adaptive,
-    "od_smallest": plan_od_smallest,
-}
+# ----------------------------------------------------------------------
+# Planner registry + budgeted planning (the public planning API)
+# ----------------------------------------------------------------------
+Planner = Callable[[ClimberIndex, jnp.ndarray], QueryPlan]
+
+_PLANNERS: Dict[str, Planner] = {}
+
+
+def register_planner(name: str, fn: Optional[Planner] = None):
+    """Register a planner under ``name`` (usable as a decorator).
+
+    Planners map ``(index, p4_rank_q [Q, m]) -> QueryPlan`` and become
+    addressable by every consumer that takes a ``variant`` string
+    (:func:`plan`, :func:`knn_query`, the serving engine, the benchmarks).
+    """
+    if fn is None:
+        return partial(register_planner, name)
+    _PLANNERS[name] = fn
+    return fn
+
+
+def get_planner(name: str) -> Planner:
+    try:
+        return _PLANNERS[name]
+    except KeyError:
+        raise KeyError(f"unknown planner variant {name!r}; "
+                       f"registered: {sorted(_PLANNERS)}") from None
+
+
+def planner_names() -> Tuple[str, ...]:
+    return tuple(sorted(_PLANNERS))
+
+
+register_planner("knn", plan_knn)
+register_planner("adaptive", plan_adaptive)
+register_planner("od_smallest", plan_od_smallest)
+
+
+def default_slot_budget(index: ClimberIndex,
+                        variant: str) -> Optional[int]:
+    """Tightest slot budget that is lossless for ``variant``'s plans.
+
+    * ``knn`` emits one node's partitions: ``maxP`` slots, all potentially
+      real — no compaction win.
+    * ``adaptive`` emits ``2·T·maxP`` padded slots but caps the *live*
+      entries per query at ``adaptive_factor ×`` the partitions CLIMBER-kNN
+      touches, itself ≤ ``maxP``.
+    * ``od_smallest`` deliberately scans all partitions of every min-OD
+      group: no bound tighter than its full width.
+
+    Unknown (user-registered) variants return ``None`` — no lossless bound
+    is knowable for them, so by default their plans are not compacted.
+    """
+    cfg = index.cfg
+    max_p = int(index.trie.part_ids_pad.shape[-1])
+    t = _num_candidates(index)
+    if variant == "knn":
+        return max_p
+    if variant == "adaptive":
+        return min(2 * t * max_p, max_p * cfg.adaptive_factor)
+    if variant == "od_smallest":
+        return t * max_p
+    return None
+
+
+def plan(index: ClimberIndex, p4_rank_q: jnp.ndarray, *,
+         variant: str = "adaptive",
+         max_slots: Optional[int] = None) -> QueryPlan:
+    """Run the registered planner and compact to a static slot budget.
+
+    ``max_slots`` resolution: explicit argument → ``cfg.query_max_slots`` →
+    :func:`default_slot_budget` (lossless; ``None`` for user-registered
+    variants, whose plans are then left uncompacted).  Compaction only ever
+    shrinks the slot axis; a budget at or above the plan width is a no-op.
+    """
+    qp = get_planner(variant)(index, p4_rank_q)
+    budget = max_slots if max_slots is not None \
+        else index.cfg.query_max_slots
+    if budget is None:
+        budget = default_slot_budget(index, variant)
+    if budget is not None and budget < qp.sel_part.shape[-1]:
+        qp = compact_plan(qp, budget)
+    return qp
 
 
 def knn_query(index: ClimberIndex, queries: jnp.ndarray, k: int = 0,
-              *, variant: str = "adaptive", use_kernel: bool = False
+              *, variant: str = "adaptive", use_kernel: bool = False,
+              mesh=None, data_axis: str = "data",
+              max_slots: Optional[int] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray, QueryPlan]:
     """End-to-end approximate kNN (feature extraction → plan → exact refine).
 
     Args:
       queries: ``[Q, n]`` raw query series.
       k: answer size (defaults to cfg.k).
-      variant: "knn" | "adaptive" | "od_smallest".
+      variant: any registered planner name ("knn" | "adaptive" |
+        "od_smallest" out of the box).
+      use_kernel: run the refine distance loop through the Pallas kernel.
+      mesh / data_axis: execute refine sharded over the mesh's data axis
+        (the store must be laid out via ``repro.distributed.shard_store``;
+        a ragged partition count is padded automatically).
+      max_slots: static slot budget for plan compaction (see :func:`plan`).
 
     Returns:
       (dist, gid, plan): ``[Q, k]`` ED + original record ids (−1 pad).
     """
     k = k or index.cfg.k
     p4r_q, _ = index.featurize(queries)
-    plan = _PLANNERS[variant](index, p4r_q)
-    dist, gid = _refine(index.store, queries, plan.sel_part,
-                                  plan.sel_lo, plan.sel_hi, k,
-                                  use_kernel=use_kernel)
-    return dist, gid, plan
+    qp = plan(index, p4r_q, variant=variant, max_slots=max_slots)
+    dist, gid = dispatch_refine(index.store, queries, qp.sel_part,
+                                qp.sel_lo, qp.sel_hi, k, mesh=mesh,
+                                data_axis=data_axis, use_kernel=use_kernel)
+    return dist, gid, qp

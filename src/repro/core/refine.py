@@ -5,15 +5,23 @@ selected partitions, restrict to records belonging to the targeted trie
 node(s) (interval test on the DFS tag — the paper's contiguous node clusters),
 compute exact ED against the raw series, and rank for the final top-K.
 
-Two execution paths:
-  * ``refine``          — jnp path (oracle; default on CPU);
-  * ``repro.kernels.l2_topk`` — Pallas kernel for the distance hot loop
-    (invoked by passing ``use_kernel=True``; validated against this path).
+Execution backends, unified behind :func:`dispatch_refine` (the only entry
+point the query layer and the serving engine use):
+  * ``refine``          — dense jnp path (oracle; default on CPU);
+  * ``use_kernel=True`` — the distance hot loop runs the Pallas kernel
+    (``repro.kernels.l2_topk``; validated against the jnp path);
+  * ``refine_sharded``  — shard_map over the data axis: each device scans
+    only its local partition shard, produces a local top-k, and a single
+    all-gather + merge yields the global answer — the TPU analogue of the
+    paper's scatter/gather over HDFS partitions.  Composes with
+    ``use_kernel``; stores whose partition count is ragged over the mesh
+    (``P % n_dev != 0``) are padded via ``repro.distributed.pad_store``.
 
-The distributed variant (``refine_sharded``) is a shard_map over the data
-axis: each device scans only its local partition shard, produces a local
-top-k, and a single all-gather + merge yields the global answer — the TPU
-analogue of the paper's scatter/gather over HDFS partitions.
+Duplicate-coverage removal (a node and its ancestor both selected) is a
+sorted-slot segmented scan: plan entries are sorted by partition id, and a
+record is dropped when an earlier entry of the same partition already
+included it — O(Q·MP·cap) instead of the former O(Q·MP²·cap) pairwise
+einsum over entry pairs.
 """
 from __future__ import annotations
 
@@ -26,6 +34,33 @@ import jax.numpy as jnp
 from repro.core.index import PartitionStore
 
 _INF = jnp.float32(3.4e38)
+
+
+def _sort_by_partition(sel_part, sel_lo, sel_hi):
+    """Stable-sort plan entries by partition id (pads first, ties by entry
+    order) so duplicate coverage is detectable by a segmented scan."""
+    order = jnp.argsort(sel_part, axis=-1, stable=True)
+    take = lambda t: jnp.take_along_axis(t, order, axis=-1)
+    return take(sel_part), take(sel_lo), take(sel_hi)
+
+
+def _dedupe_segments(sel_part, incl):
+    """Drop records already included by an earlier same-partition entry.
+
+    ``sel_part`` must be sorted along the entry axis so equal partition ids
+    form contiguous segments.  Within a segment, a slot is kept at the first
+    entry whose node interval covers it: the exclusive running inclusion
+    count since the segment start is zero.
+    """
+    mp = sel_part.shape[-1]
+    pos = jnp.arange(mp)
+    seg_new = jnp.concatenate(
+        [jnp.ones_like(sel_part[:, :1], bool),
+         sel_part[:, 1:] != sel_part[:, :-1]], axis=-1)
+    seg_start = jax.lax.cummax(jnp.where(seg_new, pos[None, :], 0), axis=1)
+    ex_cum = jnp.cumsum(incl.astype(jnp.int32), axis=1) - incl
+    start_cum = jnp.take_along_axis(ex_cum, seg_start[:, :, None], axis=1)
+    return incl & ((ex_cum - start_cum) == 0)
 
 
 def _masked_distances(store: PartitionStore, queries: jnp.ndarray,
@@ -43,6 +78,8 @@ def _masked_distances(store: PartitionStore, queries: jnp.ndarray,
       (d2, gid): ``[Q, MP*cap]`` masked squared distances (masked = +inf) and
       the corresponding original record ids.
     """
+    sel_part, sel_lo, sel_hi = _sort_by_partition(sel_part, sel_lo, sel_hi)
+
     q2 = jnp.sum(queries * queries, axis=-1)                    # [Q]
     pid = jnp.maximum(sel_part, 0)                              # clamp pads
     rows = store.data[pid]                                      # [Q, MP, cap, n]
@@ -60,16 +97,7 @@ def _masked_distances(store: PartitionStore, queries: jnp.ndarray,
     valid = rgid >= 0
     in_node = (rdfs >= sel_lo[:, :, None]) & (rdfs < sel_hi[:, :, None])
     incl = valid & in_node & (sel_part >= 0)[:, :, None]
-    # Dedupe: if two selected entries cover the same record (e.g. a node and
-    # its ancestor were both selected), count it at the first entry only.
-    # Key on (partition id, slot): identical across duplicate entries.
-    same_pid = pid[:, :, None] == pid[:, None, :]               # [Q, MP, MP]
-    earlier = jnp.tril(jnp.ones(same_pid.shape[-2:], bool), k=-1)
-    # record included by an earlier entry of the same partition?
-    incl_earlier = jnp.einsum("qec,qme->qmc",
-                              incl.astype(jnp.float32),
-                              (same_pid & earlier).astype(jnp.float32)) > 0
-    incl = incl & ~incl_earlier
+    incl = _dedupe_segments(sel_part, incl)
 
     q = queries.shape[0]
     d2 = jnp.where(incl, d2, _INF).reshape(q, -1)
@@ -105,19 +133,23 @@ def merge_topk(dist_a, gid_a, dist_b, gid_b, k: int):
 
 def refine_sharded(store: PartitionStore, queries: jnp.ndarray,
                    sel_part: jnp.ndarray, sel_lo: jnp.ndarray,
-                   sel_hi: jnp.ndarray, k: int, *, mesh, data_axis: str = "data"):
+                   sel_hi: jnp.ndarray, k: int, *, mesh,
+                   data_axis: str = "data", use_kernel: bool = False):
     """Distributed refine: local masked scan + local top-k + all-gather merge.
 
     ``store`` must be sharded over partitions on ``data_axis`` (P → data);
     queries and the plan are replicated.  Partition ids inside ``sel_part``
-    are global; each device matches them against its local pid range.
+    are global; each device matches them against its local pid range.  A
+    ragged store (``P % n_dev != 0``) is padded with empty partitions first.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    p_total = store.num_partitions
     n_dev = mesh.shape[data_axis]
-    per_dev = p_total // n_dev
+    if store.num_partitions % n_dev:
+        from repro.distributed.store import shard_store
+        store = shard_store(store, mesh, data_axis=data_axis)
+    per_dev = store.num_partitions // n_dev
 
     def local_fn(data, norms, rdfs, rgid, count, q, sp, lo, hi):
         dev = jax.lax.axis_index(data_axis)
@@ -127,14 +159,17 @@ def refine_sharded(store: PartitionStore, queries: jnp.ndarray,
         # global → local partition ids; out-of-range → -1 (skipped locally)
         sp_local = jnp.where((sp >= base) & (sp < base + per_dev),
                              sp - base, -1)
-        dist, gid = refine(local_store, q, sp_local, lo, hi, k)
+        dist, gid = refine(local_store, q, sp_local, lo, hi, k,
+                           use_kernel=use_kernel)
         dist_all = jax.lax.all_gather(dist, data_axis, axis=0)   # [D, Q, k]
         gid_all = jax.lax.all_gather(gid, data_axis, axis=0)
         d = dist_all.transpose(1, 0, 2).reshape(q.shape[0], -1)
         g = gid_all.transpose(1, 0, 2).reshape(q.shape[0], -1)
         d = jnp.where(g >= 0, d, _INF)
         neg, idx = jax.lax.top_k(-d, k)
-        return -neg, jnp.take_along_axis(g, idx, axis=-1)
+        g_top = jnp.take_along_axis(g, idx, axis=-1)
+        # pad answers carry the same sentinel as the dense path (sqrt(_INF))
+        return jnp.where(g_top >= 0, -neg, jnp.sqrt(_INF)), g_top
 
     fn = shard_map(
         local_fn, mesh=mesh,
@@ -144,3 +179,21 @@ def refine_sharded(store: PartitionStore, queries: jnp.ndarray,
         check_rep=False)
     return fn(store.data, store.norms, store.rec_dfs, store.rec_gid,
               store.count, queries, sel_part, sel_lo, sel_hi)
+
+
+def dispatch_refine(store: PartitionStore, queries: jnp.ndarray,
+                    sel_part: jnp.ndarray, sel_lo: jnp.ndarray,
+                    sel_hi: jnp.ndarray, k: int, *, mesh=None,
+                    data_axis: str = "data", use_kernel: bool = False):
+    """Single execution-dispatch layer for the whole query stack.
+
+    ``mesh=None`` (or a 1-device data axis) runs the single-device path;
+    a multi-device mesh runs the shard_map path.  ``use_kernel`` routes the
+    distance hot loop through the Pallas kernel on either path.
+    """
+    if mesh is not None and mesh.shape[data_axis] > 1:
+        return refine_sharded(store, queries, sel_part, sel_lo, sel_hi, k,
+                              mesh=mesh, data_axis=data_axis,
+                              use_kernel=use_kernel)
+    return refine(store, queries, sel_part, sel_lo, sel_hi, k,
+                  use_kernel=use_kernel)

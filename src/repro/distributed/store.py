@@ -1,0 +1,62 @@
+"""PartitionStore layout over the data axis of a device mesh.
+
+The CLIMBER store is the TPU analogue of the paper's HDFS blocks: a dense
+``[P, cap, n]`` array plus per-record masks.  For distributed query execution
+(`repro.core.refine.refine_sharded`) every store field must be sharded over
+its leading partition axis so each device scans only its local shard.  These
+helpers make that layout a one-liner:
+
+  * :func:`store_pspecs`  — the PartitionSpec tree (every field: ``P(data)``);
+  * :func:`pad_store`     — pad P up to a multiple of the axis size (ragged
+    partition counts would otherwise be silently truncated by the per-device
+    split); padding slots carry ``rec_gid = -1`` so they can never match;
+  * :func:`shard_store`   — pad + ``device_put`` with NamedShardings.
+
+Global partition ids are preserved: padding appends empty partitions at the
+end, and planners only ever emit real partition ids, so a padded store is
+query-for-query equivalent to the unpadded one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.core.index import PartitionStore
+
+
+def store_pspecs(data_axis: str = "data") -> PartitionStore:
+    """PartitionSpec per store field: everything shards its leading P axis."""
+    return PartitionStore(
+        data=PS(data_axis), norms=PS(data_axis), rec_dfs=PS(data_axis),
+        rec_gid=PS(data_axis), count=PS(data_axis))
+
+
+def pad_store(store: PartitionStore, multiple: int) -> PartitionStore:
+    """Append empty partitions so ``P % multiple == 0`` (no-op when it is).
+
+    Padded slots are inert: ``rec_gid``/``rec_dfs`` are −1 (never a live
+    record, never inside a node interval) and no planner emits their ids.
+    """
+    pad = (-store.num_partitions) % multiple
+    if pad == 0:
+        return store
+    tail = lambda x: ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+    return PartitionStore(
+        data=jnp.pad(store.data, tail(store.data)),
+        norms=jnp.pad(store.norms, tail(store.norms)),
+        rec_dfs=jnp.pad(store.rec_dfs, tail(store.rec_dfs),
+                        constant_values=-1),
+        rec_gid=jnp.pad(store.rec_gid, tail(store.rec_gid),
+                        constant_values=-1),
+        count=jnp.pad(store.count, tail(store.count)))
+
+
+def shard_store(store: PartitionStore, mesh, *,
+                data_axis: str = "data") -> PartitionStore:
+    """Lay the store out over ``data_axis``: pad P, then place each field."""
+    store = pad_store(store, mesh.shape[data_axis])
+    specs = store_pspecs(data_axis)
+    return PartitionStore(*[
+        jax.device_put(x, NamedSharding(mesh, s))
+        for x, s in zip(store, specs)])

@@ -1,1 +1,3 @@
 from repro.serve.engine import Engine, Request
+from repro.serve.knn_engine import (ClimberEngine, EngineStats, QueryMetrics,
+                                    QueryRequest)

@@ -1,0 +1,253 @@
+"""ClimberEngine — batched kNN serving over the CLIMBER index.
+
+The retrieval-plane sibling of the slot-based LLM ``Engine``
+(repro.serve.engine): requests are admitted into fixed-shape query batches
+so the whole plan→refine pipeline jits once per batch size and every tick
+serves a full batch.  One code path covers all execution backends — the
+engine resolves its planner by name from the registry
+(``repro.core.query``), compacts every plan to the static slot budget, and
+executes refine through ``dispatch_refine``, which picks dense /
+Pallas-kernel / shard_map-sharded execution from the engine's ``mesh``.
+
+Static-shape adaptation: a tick always runs ``batch_size`` query rows; when
+fewer requests are waiting the tail rows are zero-padded and their outputs
+dropped.  Planning and refine are row-independent (per-row top_k /
+arg-reductions only), so a query's (dist, gid) is bit-identical whichever
+batch it rides in — ``run`` on a big batch equals per-query ``knn_query``.
+
+Per-query metrics (partitions touched, candidates scanned, latency,
+batch fill) ride on every completed request; ``EngineStats`` aggregates
+them into the queries/sec numbers the benchmarks report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import ClimberIndex
+from repro.core.query import candidates_scanned, default_slot_budget, \
+    get_planner, plan as plan_queries
+from repro.core.refine import dispatch_refine
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One kNN request: a raw series in, (dist, gid) + metrics out."""
+
+    rid: int
+    series: np.ndarray                       # [n] raw query series
+    k: int = 0                               # 0 => engine default
+    dist: Optional[np.ndarray] = None        # [k] ascending ED
+    gid: Optional[np.ndarray] = None         # [k] record ids (−1 pad)
+    metrics: Optional["QueryMetrics"] = None
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryMetrics:
+    partitions_touched: int    # distinct partitions the plan selected
+    candidates_scanned: int    # records resident in those partitions
+    latency_s: float           # wall time of the tick that served it
+    batch_fill: float          # live fraction of that tick's batch
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate over everything the engine has served."""
+
+    queries: int = 0
+    ticks: int = 0
+    total_s: float = 0.0
+    partitions_touched: float = 0.0          # running sums (means below)
+    candidates_scanned: float = 0.0
+
+    def observe(self, batch_metrics: List[QueryMetrics]) -> None:
+        self.ticks += 1
+        for m in batch_metrics:
+            self.queries += 1
+            self.partitions_touched += m.partitions_touched
+            self.candidates_scanned += m.candidates_scanned
+        if batch_metrics:
+            self.total_s += batch_metrics[0].latency_s
+
+    @property
+    def queries_per_sec(self) -> float:
+        return self.queries / self.total_s if self.total_s else 0.0
+
+    @property
+    def mean_partitions_touched(self) -> float:
+        return self.partitions_touched / self.queries if self.queries else 0.0
+
+    @property
+    def mean_candidates_scanned(self) -> float:
+        return self.candidates_scanned / self.queries if self.queries else 0.0
+
+
+class ClimberEngine:
+    """Batched, sharded, kernel-first kNN serving loop.
+
+    Args:
+      index: a built ClimberIndex.  With ``mesh`` given, the store is laid
+        out over the mesh's data axis at construction (ragged partition
+        counts are padded), so every tick runs the shard_map refine.
+      batch_size: rows per tick — the one static batch shape that jits.
+      variant: registered planner name ("knn" | "adaptive" | "od_smallest"
+        or anything added via ``register_planner``).
+      k: default answer size (0 => ``cfg.k``).
+      use_kernel: route the refine distance loop through the Pallas kernel.
+      max_slots: static slot budget for plan compaction (None => the
+        lossless ``default_slot_budget`` unless ``cfg.query_max_slots``
+        overrides it; stays None — i.e. no compaction — for
+        user-registered variants with no knowable lossless bound).
+
+    The configuration (variant, k, backend, budget, store layout) is baked
+    into the compiled pipeline at construction; mutating these attributes
+    afterwards has no effect on the cached trace — build a new engine
+    instead.
+    """
+
+    def __init__(self, index: ClimberIndex, *, batch_size: int = 8,
+                 variant: str = "adaptive", k: int = 0,
+                 use_kernel: bool = False, mesh=None,
+                 data_axis: str = "data",
+                 max_slots: Optional[int] = None):
+        get_planner(variant)                 # fail fast on unknown variants
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.index = index
+        self.batch_size = batch_size
+        self.variant = variant
+        self.k = k or index.cfg.k
+        self.use_kernel = use_kernel
+        self.mesh = mesh
+        self.data_axis = data_axis
+        if max_slots is None:
+            max_slots = index.cfg.query_max_slots
+        if max_slots is None:
+            max_slots = default_slot_budget(index, variant)
+        self.max_slots = max_slots
+
+        self.store = index.store
+        if mesh is not None and mesh.shape[data_axis] > 1:
+            from repro.distributed.store import shard_store
+            self.store = shard_store(index.store, mesh, data_axis=data_axis)
+
+        self.queue: List[QueryRequest] = []
+        self.stats = EngineStats()
+        self._exec = jax.jit(self._pipeline)
+
+    # -- the one fused pipeline (plan → compact → dispatch refine) --------
+    def _pipeline(self, queries: jnp.ndarray):
+        index = self.index
+        p4r, _ = index.featurize(queries)
+        qp = plan_queries(index, p4r, variant=self.variant,
+                          max_slots=self.max_slots)
+        dist, gid = dispatch_refine(
+            self.store, queries, qp.sel_part, qp.sel_lo, qp.sel_hi, self.k,
+            mesh=self.mesh, data_axis=self.data_axis,
+            use_kernel=self.use_kernel)
+        return dist, gid, qp.partitions_touched(), \
+            candidates_scanned(qp, self.store)
+
+    def _execute(self, qbatch: np.ndarray):
+        """One fixed-shape tick.  Returns host arrays + wall seconds."""
+        t0 = time.perf_counter()
+        dist, gid, touched, scanned = self._exec(jnp.asarray(qbatch))
+        jax.block_until_ready(gid)
+        dt = time.perf_counter() - t0
+        return (np.asarray(dist), np.asarray(gid), np.asarray(touched),
+                np.asarray(scanned), dt)
+
+    # -- request-queue serving -------------------------------------------
+    def submit(self, req: QueryRequest) -> None:
+        """Enqueue a request (rejects malformed ones before they can
+        poison a whole batch)."""
+        n = self.index.cfg.series_len
+        series = np.asarray(req.series, dtype=np.float32)
+        if series.shape != (n,):
+            raise ValueError(f"request {req.rid}: series shape "
+                             f"{series.shape} != ({n},)")
+        if req.k > self.k:
+            raise ValueError(f"request {req.rid}: k={req.k} exceeds the "
+                             f"engine's static answer size k={self.k}")
+        req.series = series
+        self.queue.append(req)
+
+    def step(self) -> int:
+        """Serve one batch from the queue; returns #requests completed."""
+        if not self.queue:
+            return 0
+        live = self.queue[:min(self.batch_size, len(self.queue))]
+        n = self.index.cfg.series_len
+        qbatch = np.zeros((self.batch_size, n), dtype=np.float32)
+        for i, req in enumerate(live):
+            qbatch[i] = req.series
+        # pop only after the tick succeeds: a device error leaves the
+        # queue intact instead of dropping in-flight requests
+        dist, gid, touched, scanned, dt = self._execute(qbatch)
+        del self.queue[:len(live)]
+
+        fill = len(live) / self.batch_size
+        metrics = []
+        for i, req in enumerate(live):
+            kq = req.k or self.k
+            req.dist, req.gid = dist[i, :kq], gid[i, :kq]
+            req.metrics = QueryMetrics(
+                partitions_touched=int(touched[i]),
+                candidates_scanned=int(scanned[i]),
+                latency_s=dt, batch_fill=fill)
+            req.done = True
+            metrics.append(req.metrics)
+        self.stats.observe(metrics)
+        return len(live)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.step():
+                return
+
+    # -- direct batch API -------------------------------------------------
+    def run(self, queries, k: int = 0
+            ) -> Tuple[np.ndarray, np.ndarray, List[QueryMetrics]]:
+        """Serve ``[Q, n]`` queries through fixed-shape ticks.
+
+        Returns ``(dist [Q, k], gid [Q, k], metrics per query)``; results
+        are bit-identical to per-query :func:`repro.core.knn_query` with
+        the engine's variant/backend (planning and refine are
+        row-independent, so batching and tail padding don't change them).
+        """
+        queries = np.asarray(queries, dtype=np.float32)
+        kq = k or self.k
+        if kq > self.k:
+            raise ValueError(f"k={kq} exceeds the engine's static answer "
+                             f"size k={self.k}; build the engine with a "
+                             f"larger k")
+        qn = queries.shape[0]
+        if qn == 0:
+            return (np.zeros((0, kq), np.float32),
+                    np.full((0, kq), -1, np.int32), [])
+        dists, gids, metrics = [], [], []
+        for lo in range(0, qn, self.batch_size):
+            chunk = queries[lo:lo + self.batch_size]
+            pad = self.batch_size - chunk.shape[0]
+            if pad:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((pad, chunk.shape[1]), np.float32)])
+            dist, gid, touched, scanned, dt = self._execute(chunk)
+            nlive = min(self.batch_size, qn - lo)
+            dists.append(dist[:nlive, :kq])
+            gids.append(gid[:nlive, :kq])
+            batch_metrics = [
+                QueryMetrics(partitions_touched=int(touched[i]),
+                             candidates_scanned=int(scanned[i]),
+                             latency_s=dt,
+                             batch_fill=nlive / self.batch_size)
+                for i in range(nlive)]
+            metrics.extend(batch_metrics)
+            self.stats.observe(batch_metrics)
+        return np.concatenate(dists), np.concatenate(gids), metrics

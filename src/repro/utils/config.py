@@ -40,6 +40,10 @@ class ClimberConfig:
     candidate_groups: int = 4      # T — groups retained for tie-breaking
     adaptive_factor: int = 4       # 1 => CLIMBER-kNN; 2/4 => Adaptive-2X/4X
     base_partitions: int = 1       # partitions CLIMBER-kNN may touch
+    query_max_slots: Optional[int] = None
+                                   # static slot budget for compact_plan
+                                   # (None => the lossless per-variant default
+                                   # from repro.core.query.default_slot_budget)
 
     # --- implementation detail (static shapes for XLA) ---
     partition_pad: Optional[int] = None  # physical slot count per partition

@@ -1,0 +1,85 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container this suite runs in bakes only the jax toolchain, so property
+tests guard their ``hypothesis`` import and fall back to this module.  It
+implements just the surface the suite uses — ``given``, ``settings`` and the
+``integers`` / ``floats`` / ``lists`` / ``sampled_from`` strategies — and
+replaces shrinking search with a fixed number of deterministic pseudo-random
+examples (seeded per test name, so failures reproduce run to run).
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def sample(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.sample(rng) for _ in range(size)]
+        return _Strategy(sample)
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+
+st = strategies
+
+
+def settings(*, max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Decorator: records ``max_examples`` on the ``given`` wrapper below."""
+    def apply(fn):
+        fn._max_examples = max_examples
+        return fn
+    return apply
+
+
+def given(*strats: _Strategy):
+    """Run the test body over deterministic samples of each strategy."""
+    def decorate(fn):
+        # NB: deliberately not functools.wraps — copying __wrapped__ would
+        # make pytest introspect the original signature and treat the drawn
+        # arguments as fixtures.
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                drawn = [s.sample(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 — re-raise with example
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on example #{i}: "
+                        f"{drawn!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return decorate

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # not in the container; vendored fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (ClimberIndex, TrieDevice, assign_groups, build_forest,
                         build_index, compute_centroids, descend, ffd_pack,

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # not in the container; vendored fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import build_index, knn_query
 from repro.core.query import compact_plan, plan_adaptive
