@@ -1,0 +1,102 @@
+"""IndexFleet serving sweep — shards × routing mode × delta fill.
+
+Drives the sharded multi-index fleet over a synthetic RandomWalk corpus:
+splits the corpus into S tenant shards, optionally streams a delta's worth
+of fresh records in, and measures queries/sec, recall against brute force
+over the *current* fleet contents, mean partitions touched, and the
+router's audited precision/fan-out savings.  The exhaustive rows are the
+lossless baseline; the signature rows show what the router trades.
+
+Besides the CSV rows, writes ``artifacts/BENCH_fleet.json`` alongside the
+engine trajectory.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import default_cfg, emit, timed
+from repro.baselines import exact_knn, recall
+from repro.data import make_dataset
+from repro.fleet import FleetConfig, IndexFleet
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+K = 20
+NUM_QUERIES = 24
+N = 6_000
+SERIES_LEN = 128
+SHARD_COUNTS = (1, 4)
+ROUTING_MODES = ("signature", "exhaustive")
+DELTA_FILLS = (0.0, 0.5)          # fraction of delta_capacity streamed in
+DELTA_CAPACITY = 1_024
+
+
+def run() -> None:
+    cfg = default_cfg(k=K)
+    base = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(0),
+                                   N, SERIES_LEN))
+    fresh = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(1),
+                                    int(DELTA_CAPACITY * max(DELTA_FILLS)),
+                                    SERIES_LEN))
+    queries = base[:NUM_QUERIES] + 0.05 * np.asarray(
+        make_dataset("randomwalk", jax.random.PRNGKey(2), NUM_QUERIES,
+                     SERIES_LEN))
+
+    cells = []
+    for shards in SHARD_COUNTS:
+        for fill in DELTA_FILLS:
+            fleet = IndexFleet(FleetConfig(
+                shard_cfg=cfg, fanout=max(1, shards // 2),
+                delta_capacity=DELTA_CAPACITY, auto_compact=False))
+            per = N // shards
+            for s in range(shards):
+                fleet.add_shard(f"t{s}", base[s * per:(s + 1) * per])
+            n_fill = int(DELTA_CAPACITY * fill)
+            if n_fill:
+                fleet.insert(fresh[:n_fill])
+            contents = np.concatenate([base[:per * shards], fresh[:n_fill]])
+            _, exact_ids = exact_knn(queries, contents, K)
+
+            for routing in ROUTING_MODES:
+                (dist, gid, info), secs = timed(
+                    lambda r=routing: fleet.query(queries, K, routing=r))
+                qps = NUM_QUERIES / secs
+                r = recall(gid, np.asarray(exact_ids))
+                parts = float(info.partitions_touched.mean())
+                fanout = float(info.routed_mask.sum(axis=1).mean()) \
+                    if info.routed_mask.size else 0.0
+                precision = fleet.audit_routing(queries, K) \
+                    if routing == "signature" else 1.0
+                tag = (f"fleet/s{shards}/fill{fill:.1f}/{routing}")
+                emit(tag, 1e6 / qps if qps else 0.0,
+                     f"qps={qps:.1f};recall={r:.3f};parts={parts:.1f};"
+                     f"precision={precision:.3f}")
+                cells.append({
+                    "shards": shards, "delta_fill": fill,
+                    "routing": routing,
+                    "queries_per_sec": round(qps, 2),
+                    "recall": round(float(r), 4),
+                    "mean_partitions_touched": round(parts, 2),
+                    "mean_fanout": round(fanout, 2),
+                    "routing_precision": round(float(precision), 4),
+                    "delta_occupancy": fleet.delta.occupancy,
+                    "num_queries": NUM_QUERIES, "k": K,
+                })
+
+    ART.mkdir(exist_ok=True)
+    out = ART / "BENCH_fleet.json"
+    out.write_text(json.dumps({
+        "bench": "fleet",
+        "dataset": {"name": "randomwalk", "n": N, "series_len": SERIES_LEN},
+        "delta_capacity": DELTA_CAPACITY,
+        "cells": cells,
+    }, indent=2))
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

@@ -23,6 +23,8 @@ SUITES = {
     "kernels": ("benchmarks.bench_kernels", "Pallas kernel parity/µbench"),
     "engine": ("benchmarks.bench_query_engine",
                "ClimberEngine queries/sec sweep"),
+    "fleet": ("benchmarks.bench_fleet",
+              "IndexFleet shards × routing × delta-fill sweep"),
     "roofline": ("benchmarks.roofline", "§Roofline table from dry-run"),
 }
 

@@ -1,0 +1,84 @@
+"""Index-fleet serving example: shards + streaming ingest + compaction.
+
+    PYTHONPATH=src python examples/serve_fleet.py [--shards 3]
+
+Builds a fleet of per-tenant CLIMBER shards, serves a request queue through
+one FleetEngine (signature routing fans each query out to a shard subset),
+streams fresh records into the delta shard, seals it with ``compact()``,
+and shows that the answers on the same contents are unchanged.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.data import make_dataset, make_queries
+from repro.fleet import FleetConfig, FleetEngine, IndexFleet
+from repro.serve import QueryRequest
+from repro.utils.config import ClimberConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=3)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = ClimberConfig(series_len=128, paa_segments=16, num_pivots=64,
+                        prefix_len=8, capacity=256, sample_frac=0.2,
+                        max_centroids=32, k=10, candidate_groups=4,
+                        adaptive_factor=4)
+    per = 2_000
+    data = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(0),
+                                   per * args.shards, 128))
+    queries = np.asarray(make_queries(jax.random.PRNGKey(2), data,
+                                      args.requests))
+
+    fleet = IndexFleet(FleetConfig(shard_cfg=cfg, fanout=2,
+                                   delta_capacity=2_048, auto_compact=False))
+    for s in range(args.shards):
+        fleet.add_shard(f"tenant{s}", data[s * per:(s + 1) * per])
+    print(f"fleet: {len(fleet.shards)} shards, "
+          f"{fleet.total_records} records")
+
+    # serve a queue through one engine over the whole fleet
+    engine = FleetEngine(fleet, batch_size=args.batch_size, k=10,
+                         routing="signature")
+    reqs = [QueryRequest(rid=i, series=queries[i])
+            for i in range(args.requests)]
+    for req in reqs:
+        engine.submit(req)
+    engine.run_until_drained()
+    m = reqs[0].metrics
+    print(f"req 0: top-3 gids={reqs[0].gid[:3].tolist()} "
+          f"parts={m.partitions_touched} latency={m.latency_s*1e3:.1f}ms")
+
+    # streaming ingest: fresh records are visible immediately
+    fresh = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(9),
+                                    512, 128))
+    gids = fleet.insert(fresh)
+    d, g, _ = fleet.query(fresh[:1], 5, routing="exhaustive")
+    print(f"inserted {len(gids)} records (delta occupancy "
+          f"{fleet.delta.occupancy}); self-query hit gid {g[0, 0]} "
+          f"(expected {gids[0]}) at d={d[0, 0]:.4f}")
+
+    # compaction seals the delta; answers on the same contents don't move
+    d1, g1, _ = fleet.query(queries, 10, routing="exhaustive",
+                            variant="exhaustive")
+    fleet.compact()
+    d2, g2, _ = fleet.query(queries, 10, routing="exhaustive",
+                            variant="exhaustive")
+    assert np.array_equal(g1, g2) and np.array_equal(d1, d2)
+    print(f"compact(): sealed into {fleet.shards[-1].key}; "
+          f"answers unchanged")
+
+    precision = fleet.audit_routing(queries, 10)
+    s = fleet.stats
+    print(f"OK — {s.queries} fleet queries, routing precision "
+          f"{precision:.3f}, fan-out savings {s.fanout_savings:.0%}, "
+          f"per-shard load {s.per_shard_queries}")
+
+
+if __name__ == "__main__":
+    main()

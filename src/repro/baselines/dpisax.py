@@ -1,18 +1,23 @@
 """DPiSAX-like baseline (Yagoubi et al. [65]) — partitioned iSAX.
 
-DPiSAX samples the dataset, computes iSAX words, and derives a partitioning
-table by splitting on the words' most-significant bits; every record is then
-routed to exactly one partition, and a query scans the single partition its
-own word maps to.  We reproduce that design: the partition key concatenates
-the top bit of segments chosen round-robin until ~N/capacity partitions
-exist.  Accuracy is bounded by the single-partition constraint plus the
-two-level iSAX information loss — the behaviour the paper reports (<10%
-recall at scale, §I).
+DPiSAX samples the dataset, computes iSAX words, and derives a *partitioning
+table* by recursively splitting dense regions of the word space on the next
+iSAX bit until every partition respects the capacity constraint; every record
+is then routed to exactly one partition, and a query scans the single
+partition its own word maps to.  We reproduce that design: partitions are
+leaves of a binary prefix tree over the words' bits (segment-major,
+most-significant bit first — the iSAX variable-cardinality order), and a
+leaf over capacity is split on its next bit.  Adaptive splitting is what
+keeps "data touched" comparable across systems — a fixed global split would
+leave giant partitions wherever the word distribution is skewed.  Accuracy
+is still bounded by the single-partition constraint plus the two-level iSAX
+information loss — the behaviour the paper reports (<10% recall at scale,
+§I).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,42 +32,84 @@ from repro.core.refine import refine
 class DPiSAXIndex:
     segments: int
     cardinality: int
-    key_bits: int            # number of segments contributing their MSB
+    table: Dict[Tuple[int, ...], int]   # bit-prefix → partition id (leaves)
     store: PartitionStore
 
     @property
     def num_partitions(self) -> int:
-        return 1 << self.key_bits
+        return self.store.num_partitions
 
 
-def _partition_key(word: jnp.ndarray, cardinality: int, key_bits: int) -> jnp.ndarray:
-    """MSB of the first ``key_bits`` segments, concatenated."""
+def _word_bits(word: jnp.ndarray, cardinality: int) -> np.ndarray:
+    """Flatten iSAX words to their split-order bit matrix ``[..., D]``.
+
+    Bit d compares segment ``d % segments`` at depth ``d // segments`` —
+    round-robin over segments, most-significant bit first, so prefix length
+    equals iSAX cardinality refinement.
+    """
+    w = np.asarray(word)
+    segments = w.shape[-1]
     full_bits = int(cardinality).bit_length() - 1
-    msb = (word[..., :key_bits] >> (full_bits - 1)) & 1          # [..., kb]
-    weights = (1 << jnp.arange(key_bits - 1, -1, -1)).astype(jnp.int32)
-    return jnp.sum(msb * weights, axis=-1).astype(jnp.int32)
+    cols = []
+    for depth in range(full_bits):
+        shift = full_bits - 1 - depth
+        cols.append((w >> shift) & 1)                # [..., segments]
+    return np.concatenate(cols, axis=-1).astype(np.int8)  # [..., seg*bits]
+
+
+def _build_table(bits: np.ndarray, capacity: int
+                 ) -> Tuple[Dict[Tuple[int, ...], int], np.ndarray]:
+    """Adaptive partitioning table: split any over-capacity region further.
+
+    Returns the leaf table (prefix → pid) and each record's pid.
+    """
+    n, max_depth = bits.shape
+    table: Dict[Tuple[int, ...], int] = {}
+    part = np.zeros(n, dtype=np.int32)
+    stack = [(np.arange(n), 0, ())]
+    while stack:
+        rows, depth, prefix = stack.pop()
+        if len(rows) <= capacity or depth >= max_depth:
+            pid = len(table)
+            table[prefix] = pid
+            part[rows] = pid
+            continue
+        b = bits[rows, depth]
+        stack.append((rows[b == 0], depth + 1, prefix + (0,)))
+        stack.append((rows[b == 1], depth + 1, prefix + (1,)))
+    return table, part
+
+
+def _route(table: Dict[Tuple[int, ...], int], bits: np.ndarray) -> np.ndarray:
+    """Longest-prefix descent of each word through the leaf table."""
+    out = np.empty(bits.shape[0], dtype=np.int32)
+    for i, row in enumerate(bits):
+        prefix: Tuple[int, ...] = ()
+        while prefix not in table:
+            prefix = prefix + (int(row[len(prefix)]),)
+        out[i] = table[prefix]
+    return out
 
 
 def build_dpisax(data: jnp.ndarray, *, segments: int = 16,
                  cardinality: int = 8, capacity: int = 3000) -> DPiSAXIndex:
     n_rec = data.shape[0]
-    key_bits = int(np.clip(np.ceil(np.log2(max(n_rec / capacity, 1))),
-                           1, segments))
     word = sax_word(data, segments, cardinality)
-    part = _partition_key(word, cardinality, key_bits)
+    bits = _word_bits(word, cardinality)
+    table, part = _build_table(bits, capacity)
     rec_dfs = np.zeros(n_rec, dtype=np.int32)     # single node per partition
-    store = build_store(data, np.asarray(part), rec_dfs, 1 << key_bits)
+    store = build_store(data, part, rec_dfs, len(table))
     return DPiSAXIndex(segments=segments, cardinality=cardinality,
-                       key_bits=key_bits, store=store)
+                       table=table, store=store)
 
 
 def dpisax_knn(index: DPiSAXIndex, queries: jnp.ndarray, k: int
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single-partition approximate kNN (the DPiSAX query model)."""
     word = sax_word(queries, index.segments, index.cardinality)
-    part = _partition_key(word, index.cardinality, index.key_bits)
+    part = _route(index.table, _word_bits(word, index.cardinality))
     q = queries.shape[0]
-    sel_part = part[:, None]                                     # [Q, 1]
+    sel_part = jnp.asarray(part)[:, None]                        # [Q, 1]
     sel_lo = jnp.zeros((q, 1), jnp.int32)
     sel_hi = jnp.ones((q, 1), jnp.int32)
     return refine(index.store, queries, sel_part, sel_lo, sel_hi, k)

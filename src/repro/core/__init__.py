@@ -15,10 +15,11 @@ from repro.core.traversal import TrieDevice, descend, route_records
 from repro.core.index import ClimberIndex, PartitionStore, build_index, build_store
 from repro.core.query import (QueryPlan, candidates_scanned, compact_plan,
                               default_slot_budget, get_planner, knn_query,
-                              plan, plan_knn, plan_adaptive, plan_od_smallest,
-                              planner_names, register_planner)
-from repro.core.refine import (dispatch_refine, refine, refine_sharded,
-                               merge_topk)
+                              plan, plan_knn, plan_adaptive, plan_exhaustive,
+                              plan_od_smallest, planner_names,
+                              register_planner)
+from repro.core.refine import (PAD_DIST, dispatch_refine, refine,
+                               refine_sharded, merge_topk)
 
 __all__ = [
     "paa", "znormalize", "select_pivots", "compute_signatures",
@@ -29,8 +30,8 @@ __all__ = [
     "assignment_distances", "build_forest", "TrieForest", "ffd_pack",
     "TrieDevice", "descend", "route_records", "ClimberIndex",
     "PartitionStore", "build_index", "build_store", "QueryPlan", "knn_query",
-    "plan", "plan_knn", "plan_adaptive", "plan_od_smallest",
-    "register_planner", "get_planner", "planner_names", "compact_plan",
-    "default_slot_budget", "candidates_scanned", "dispatch_refine", "refine",
-    "refine_sharded", "merge_topk",
+    "plan", "plan_knn", "plan_adaptive", "plan_exhaustive",
+    "plan_od_smallest", "register_planner", "get_planner", "planner_names",
+    "compact_plan", "default_slot_budget", "candidates_scanned",
+    "dispatch_refine", "refine", "refine_sharded", "merge_topk", "PAD_DIST",
 ]

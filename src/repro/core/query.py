@@ -223,6 +223,37 @@ def plan_adaptive(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
                      node=node_star, pathlen=pathlen_star)
 
 
+def exhaustive_selection(num_partitions: int, q: int):
+    """(sel_part, sel_lo, sel_hi) selecting every record of every partition.
+
+    The one place the scan-everything convention lives (full partition
+    range, DFS interval [0, int32 max) covering every node); shared by
+    :func:`plan_exhaustive` and the fleet's fused full-scan fallback.
+    """
+    parts = jnp.broadcast_to(
+        jnp.arange(num_partitions, dtype=jnp.int32)[None, :],
+        (q, num_partitions))
+    lo = jnp.zeros((q, num_partitions), jnp.int32)
+    hi = jnp.full((q, num_partitions), jnp.iinfo(jnp.int32).max, jnp.int32)
+    return parts, lo, hi
+
+
+def plan_exhaustive(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
+    """Lossless fallback: scan every partition of every group (exact kNN).
+
+    Selects all P partitions with a DFS interval covering every node, so the
+    refine stage computes exact ED against the whole store — the answer
+    equals brute-force kNN over the indexed data.  This is the fleet's
+    exhaustive fan-out unit and the recall oracle for routing audits; it is
+    never the serving default (it reads everything).
+    """
+    q = p4_rank_q.shape[0]
+    parts, lo, hi = exhaustive_selection(index.store.num_partitions, q)
+    zero = jnp.zeros((q,), jnp.int32)
+    return QueryPlan(sel_part=parts, sel_lo=lo, sel_hi=hi,
+                     node=zero, pathlen=zero)
+
+
 def plan_od_smallest(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
     """OD-Smallest ablation (§VII-C): all partitions of all min-OD groups."""
     cfg = index.cfg
@@ -295,6 +326,7 @@ def planner_names() -> Tuple[str, ...]:
 register_planner("knn", plan_knn)
 register_planner("adaptive", plan_adaptive)
 register_planner("od_smallest", plan_od_smallest)
+register_planner("exhaustive", plan_exhaustive)
 
 
 def default_slot_budget(index: ClimberIndex,
@@ -321,6 +353,8 @@ def default_slot_budget(index: ClimberIndex,
         return min(2 * t * max_p, max_p * cfg.adaptive_factor)
     if variant == "od_smallest":
         return t * max_p
+    if variant == "exhaustive":
+        return index.store.num_partitions
     return None
 
 

@@ -30,10 +30,16 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.index import PartitionStore
 
 _INF = jnp.float32(3.4e38)
+
+# Sentinel distance of a pad answer (gid = -1): both refine paths emit
+# sqrt(_INF) for slots with fewer than k candidates, so consumers that merge
+# top-k lists across calls (the fleet) seed their accumulators with this.
+PAD_DIST = float(np.sqrt(np.float32(3.4e38)))
 
 
 def _sort_by_partition(sel_part, sel_lo, sel_hi):
@@ -116,6 +122,10 @@ def refine(store: PartitionStore, queries: jnp.ndarray, sel_part: jnp.ndarray,
     """
     d2, gid = _masked_distances(store, queries, sel_part, sel_lo, sel_hi,
                                 use_kernel=use_kernel)
+    if d2.shape[-1] < k:        # tiny store: fewer slots than answers asked
+        tail = [(0, 0)] * (d2.ndim - 1) + [(0, k - d2.shape[-1])]
+        d2 = jnp.pad(d2, tail, constant_values=_INF)
+        gid = jnp.pad(gid, tail, constant_values=-1)
     neg, idx = jax.lax.top_k(-d2, k)
     top_gid = jnp.take_along_axis(gid, idx, axis=-1)
     dist = jnp.sqrt(jnp.maximum(-neg, 0.0))
@@ -123,10 +133,39 @@ def refine(store: PartitionStore, queries: jnp.ndarray, sel_part: jnp.ndarray,
     return dist, top_gid
 
 
-def merge_topk(dist_a, gid_a, dist_b, gid_b, k: int):
-    """Merge two top-k lists (used by the sharded all-gather reduction)."""
+def merge_topk(dist_a, gid_a, dist_b, gid_b, k: int, *, dedupe: bool = False):
+    """Merge two per-query top-k lists into one ``[..., k]`` top-k.
+
+    Pad entries (``gid = -1``) must carry the :data:`PAD_DIST` sentinel so
+    they lose to every real candidate; the sentinel propagates into the
+    output wherever fewer than k real candidates exist across both inputs.
+
+    ``dedupe=False`` (default) assumes the inputs hold disjoint record sets
+    — the sharded all-gather reduction and the fleet's sealed shards satisfy
+    this — and keeps duplicate gids if the caller violates it.
+    ``dedupe=True`` keeps only the best-ranked copy of each gid (ties break
+    toward input a, then slot order); it costs O(k²) pairwise compares, so
+    reserve it for merges that can legitimately see the same record twice.
+    """
     dist = jnp.concatenate([dist_a, dist_b], axis=-1)
     gid = jnp.concatenate([gid_a, gid_b], axis=-1)
+    if dedupe:
+        # entry j dominates entry i when they carry the same real gid and j
+        # ranks strictly better: smaller distance, or equal distance and an
+        # earlier slot.  Dominated entries become pads before the top-k.
+        same = (gid[..., :, None] == gid[..., None, :]) & \
+            (gid[..., None, :] >= 0)
+        d_i, d_j = dist[..., :, None], dist[..., None, :]
+        n2 = dist.shape[-1]
+        earlier = jnp.arange(n2)[None, :] < jnp.arange(n2)[:, None]  # j < i
+        dominated = jnp.any(
+            same & ((d_j < d_i) | ((d_j == d_i) & earlier)), axis=-1)
+        dist = jnp.where(dominated, jnp.float32(PAD_DIST), dist)
+        gid = jnp.where(dominated, -1, gid)
+    if dist.shape[-1] < k:                   # fewer candidates than asked for
+        tail = [(0, 0)] * (dist.ndim - 1) + [(0, k - dist.shape[-1])]
+        dist = jnp.pad(dist, tail, constant_values=PAD_DIST)
+        gid = jnp.pad(gid, tail, constant_values=-1)
     neg, idx = jax.lax.top_k(-dist, k)
     return -neg, jnp.take_along_axis(gid, idx, axis=-1)
 

@@ -80,6 +80,9 @@ def descend(trie: TrieDevice, p4_rank: jnp.ndarray,
     alive = jnp.ones(node.shape, dtype=bool)
     pathlen = jnp.zeros(node.shape, dtype=jnp.int32)
 
+    if e == 0:        # edgeless forest (tiny builds): everyone stays at root
+        return node, pathlen, parent
+
     for d in range(m):                             # m is small and static
         key = node * trie.num_pivots + p4_rank[..., d].astype(jnp.int32)
         pos = jnp.searchsorted(trie.edge_key, key)

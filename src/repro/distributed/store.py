@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.core.index import PartitionStore
@@ -50,6 +51,44 @@ def pad_store(store: PartitionStore, multiple: int) -> PartitionStore:
         rec_gid=jnp.pad(store.rec_gid, tail(store.rec_gid),
                         constant_values=-1),
         count=jnp.pad(store.count, tail(store.count)))
+
+
+def concat_stores(stores, gid_maps=None) -> PartitionStore:
+    """Fuse several shard stores into one union store along the P axis.
+
+    The fleet's lossless full-scan fallback executes one ``dispatch_refine``
+    over this union instead of a per-shard scatter/gather.  Slot capacities
+    are padded to the fleet-wide max with inert slots (``rec_gid = -1``), so
+    a fused scan touches exactly the union of live records.
+
+    Args:
+      stores: sequence of PartitionStore (same series_len).
+      gid_maps: optional per-store ``[n_i]`` arrays mapping the store's local
+        record ids to global ids; identity (with no offset) when omitted —
+        pass maps whenever the shards' local id spaces overlap.
+    """
+    stores = list(stores)
+    if not stores:
+        raise ValueError("concat_stores needs at least one store")
+    cap = max(s.capacity for s in stores)
+    fields = {"data": [], "norms": [], "rec_dfs": [], "rec_gid": [],
+              "count": []}
+    for i, s in enumerate(stores):
+        pad = cap - s.capacity
+        slot = lambda x, cv=0: jnp.pad(
+            x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2),
+            constant_values=cv)
+        gid = slot(s.rec_gid, -1)
+        if gid_maps is not None:
+            gmap = jnp.asarray(np.asarray(gid_maps[i], dtype=np.int32))
+            gid = jnp.where(gid >= 0, gmap[jnp.maximum(gid, 0)], -1)
+        fields["data"].append(slot(s.data))
+        fields["norms"].append(slot(s.norms))
+        fields["rec_dfs"].append(slot(s.rec_dfs, -1))
+        fields["rec_gid"].append(gid)
+        fields["count"].append(s.count)
+    return PartitionStore(**{k: jnp.concatenate(v, axis=0)
+                             for k, v in fields.items()})
 
 
 def shard_store(store: PartitionStore, mesh, *,

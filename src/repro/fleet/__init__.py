@@ -1,0 +1,8 @@
+"""Index fleet — sharded multi-index serving with streaming ingest."""
+from repro.fleet.fleet import (DeltaShard, FleetConfig, FleetQueryInfo,
+                               FleetStats, IndexFleet, ShardHandle)
+from repro.fleet.router import SignatureRouter
+from repro.fleet.engine import FleetEngine
+
+__all__ = ["IndexFleet", "FleetConfig", "FleetStats", "FleetQueryInfo",
+           "ShardHandle", "DeltaShard", "SignatureRouter", "FleetEngine"]

@@ -1,0 +1,66 @@
+"""FleetEngine — one serving engine over a whole IndexFleet.
+
+The same fixed-shape batched admission as :class:`repro.serve.ClimberEngine`
+(identical queue / tick / metrics machinery via
+:class:`repro.serve.BatchedServingLoop`), but a tick executes
+``IndexFleet.query``: route → per-shard kNN → ``merge_topk`` fusion, so one
+engine serves every tenant's shard plus the streaming delta.  Per-query
+metrics aggregate over every shard a query touched.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.refine import PAD_DIST
+from repro.fleet.fleet import IndexFleet
+from repro.serve.knn_engine import BatchedServingLoop
+
+
+class FleetEngine(BatchedServingLoop):
+    """Batched request serving across all shards of a fleet.
+
+    Args:
+      fleet: the IndexFleet to serve (may keep ingesting between ticks —
+        the fleet query path always sees the current shard set + delta).
+      routing: ``"signature"`` (router fan-out) or ``"exhaustive"``.
+      variant: per-shard planner variant.
+    """
+
+    def __init__(self, fleet: IndexFleet, *, batch_size: int = 8, k: int = 0,
+                 routing: str = "signature", variant: str = "adaptive",
+                 use_kernel: bool = False, fanout: Optional[int] = None):
+        if routing not in ("signature", "exhaustive"):
+            raise ValueError(f"unknown routing mode {routing!r}")
+        cfg = fleet.cfg.shard_cfg
+        super().__init__(series_len=cfg.series_len, batch_size=batch_size,
+                         k=k or cfg.k)
+        self.fleet = fleet
+        self.routing = routing
+        self.variant = variant
+        self.use_kernel = use_kernel
+        self.fanout = fanout
+
+    def _execute(self, qbatch: np.ndarray, nlive: int):
+        """One tick: fleet-query the live rows, pad results back out.
+
+        Unlike the single-index engine the fleet path is host-orchestrated,
+        so the zero-padded tail rows are simply not executed.
+        """
+        t0 = time.perf_counter()
+        dist, gid, info = self.fleet.query(
+            qbatch[:nlive], k=self.k, routing=self.routing,
+            variant=self.variant, use_kernel=self.use_kernel,
+            fanout=self.fanout)
+        dt = time.perf_counter() - t0
+        bs = self.batch_size
+        d = np.full((bs, self.k), PAD_DIST, np.float32)
+        g = np.full((bs, self.k), -1, np.int32)
+        touched = np.zeros(bs, np.int64)
+        scanned = np.zeros(bs, np.int64)
+        d[:nlive], g[:nlive] = dist, gid
+        touched[:nlive] = info.partitions_touched
+        scanned[:nlive] = info.candidates_scanned
+        return d, g, touched, scanned, dt

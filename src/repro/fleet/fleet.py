@@ -1,0 +1,503 @@
+"""IndexFleet — sharded multi-index serving with streaming ingest.
+
+The single two-level CLIMBER index is built once and queried forever; a
+serving system needs many of them (per-tenant, per-time-range) plus a place
+for data that keeps arriving.  The fleet owns:
+
+  * **sealed shards** — immutable :class:`repro.core.ClimberIndex` instances
+    keyed by tenant / time-range, each with a ``global_ids`` map from its
+    local record ids to fleet-global ids;
+  * a **router** (:class:`repro.fleet.router.SignatureRouter`) that fans a
+    query out to a shard subset scored on signature-prefix affinity, with
+    exhaustive fan-out as the lossless fallback;
+  * a **delta shard** — an append-only index with per-partition capacity
+    slack that absorbs ``insert()`` batches through the existing assignment
+    path (featurize → group → trie → partition scatter) and is always
+    queried, so new records are visible immediately;
+  * ``compact()`` — seals the delta into an immutable shard by re-running
+    the full CLIMBER-INX build (pivot selection, centroids, partitioning)
+    over its contents, preserving global ids, so queries always see one
+    consistent fleet view.
+
+Cross-shard fusion goes through :func:`repro.core.merge_topk` with
+global-id remapping; per-shard answers carry the :data:`repro.core.PAD_DIST`
+sentinel for missing slots, which propagates through every merge.  With
+exhaustive routing and the ``"exhaustive"`` planner variant the fleet answer
+is bit-identical to a single-index ``knn_query`` over the concatenated data
+(both are exact ED top-k computed by the same refine arithmetic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import (ClimberIndex, PartitionStore,
+                              _route_full_dataset_jit, build_index,
+                              build_store)
+from repro.core.query import (candidates_scanned, exhaustive_selection,
+                              knn_query)
+from repro.core.refine import PAD_DIST, dispatch_refine, merge_topk, refine
+from repro.distributed.store import concat_stores
+from repro.fleet.router import SignatureRouter
+from repro.utils.config import ClimberConfig
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Fleet-level knobs on top of the per-shard :class:`ClimberConfig`."""
+
+    shard_cfg: ClimberConfig
+    fanout: int = 2                 # shards the router selects per query
+    delta_capacity: int = 4096      # records the delta holds before sealing
+    delta_pad: Optional[int] = None  # physical slots per delta partition
+                                     # (None => shard_cfg.capacity — full
+                                     # capacity slack for in-place appends)
+    auto_compact: bool = True       # seal automatically at delta_capacity
+    seed: int = 0
+
+
+@dataclass
+class ShardHandle:
+    """One immutable member of the fleet."""
+
+    key: str                        # tenant / time-range label
+    index: ClimberIndex
+    global_ids: np.ndarray          # [n_shard] local row -> global record id
+    sealed: bool = True
+
+    @property
+    def num_records(self) -> int:
+        return int(self.global_ids.shape[0])
+
+
+@dataclass
+class FleetStats:
+    """Aggregate serving/ingest counters for the whole fleet."""
+
+    queries: int = 0
+    inserts: int = 0
+    compactions: int = 0
+    delta_rebuilds: int = 0
+    delta_occupancy: int = 0
+    routed_pairs: int = 0           # (query, shard) executions actually run
+    exhaustive_pairs: int = 0       # what exhaustive fan-out would have run
+    routing_audits: int = 0
+    routing_overlap: float = 0.0    # running sum of audited precision
+    per_shard_queries: Dict[str, int] = field(default_factory=dict)
+    per_shard_partitions: Dict[str, int] = field(default_factory=dict)
+
+    def observe_shard(self, key: str, queries: int, partitions: int) -> None:
+        self.per_shard_queries[key] = \
+            self.per_shard_queries.get(key, 0) + queries
+        self.per_shard_partitions[key] = \
+            self.per_shard_partitions.get(key, 0) + partitions
+
+    @property
+    def routing_precision(self) -> float:
+        """Mean audited recall of routed vs exhaustive fan-out (1.0 = no
+        audit has seen the router drop a true neighbour)."""
+        return self.routing_overlap / self.routing_audits \
+            if self.routing_audits else 1.0
+
+    @property
+    def fanout_savings(self) -> float:
+        """Fraction of per-shard executions the router skipped."""
+        return 1.0 - self.routed_pairs / self.exhaustive_pairs \
+            if self.exhaustive_pairs else 0.0
+
+    def snapshot(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["routing_precision"] = self.routing_precision
+        d["fanout_savings"] = self.fanout_savings
+        return d
+
+
+@dataclass
+class FleetQueryInfo:
+    """Per-query execution metrics of one fleet query call."""
+
+    partitions_touched: np.ndarray   # [Q] summed over every shard executed
+    candidates_scanned: np.ndarray   # [Q]
+    routed_mask: np.ndarray          # [Q, S] sealed shards each query hit
+
+
+class DeltaShard:
+    """Append-only ingest shard with capacity slack.
+
+    Bootstrap: until ``num_pivots`` records exist a CLIMBER index cannot be
+    built (pivot selection needs that many samples), so the delta serves
+    queries from a single-partition store with an exact scan.  From the
+    first rebuild on it is a real ClimberIndex whose partitions carry
+    physical slot slack (``delta_pad``); inserts route through the existing
+    assignment path and scatter into free slots in place.  A batch that
+    overflows its target partition triggers a rebuild (re-running pivot
+    selection and partitioning over the accumulated contents).
+    """
+
+    def __init__(self, cfg: ClimberConfig, *, pad: Optional[int] = None,
+                 seed: int = 0):
+        self.cfg = cfg.replace(
+            partition_pad=pad if pad is not None else cfg.capacity)
+        self._seed = seed
+        self.data = np.zeros((0, cfg.series_len), np.float32)
+        self.global_ids = np.zeros((0,), np.int32)
+        self.index: Optional[ClimberIndex] = None
+        self.rebuilds = 0
+        self.min_build = cfg.num_pivots
+
+    @property
+    def occupancy(self) -> int:
+        return int(self.data.shape[0])
+
+    # -- ingest -----------------------------------------------------------
+    def insert(self, batch: np.ndarray, gids: np.ndarray) -> None:
+        base = self.occupancy
+        self.data = np.concatenate([self.data, batch], axis=0)
+        self.global_ids = np.concatenate(
+            [self.global_ids, gids.astype(np.int32)])
+        if self.index is None:
+            if self.occupancy >= self.min_build:
+                self._rebuild()
+            return
+        if not self._scatter(batch, base):
+            self._rebuild()
+
+    def _rebuild(self) -> None:
+        key = jax.random.fold_in(jax.random.PRNGKey(self._seed),
+                                 self.occupancy)
+        self.index = build_index(key, jnp.asarray(self.data), self.cfg)
+        self.rebuilds += 1
+
+    def _scatter(self, batch: np.ndarray, base: int) -> bool:
+        """Route a batch through the index's assignment path and append the
+        records into free partition slots.  False = some partition is full
+        (the caller rebuilds)."""
+        idx = self.index
+        part, rec_dfs = _route_full_dataset_jit(
+            jnp.asarray(batch), idx.pivots, idx.centroid_onehot, idx.trie,
+            idx.cfg)
+        part = np.asarray(part)
+        rec_dfs = np.asarray(rec_dfs)
+        store = idx.store
+        count = np.asarray(store.count).copy()
+
+        order = np.argsort(part, kind="stable")
+        ps = part[order]
+        run_start = np.concatenate([[True], ps[1:] != ps[:-1]]) \
+            if len(ps) else np.zeros(0, bool)
+        first_pos = np.nonzero(run_start)[0]
+        run_id = np.cumsum(run_start) - 1
+        within = np.arange(len(ps)) - first_pos[run_id]
+        slots = count[ps] + within
+        if len(slots) and slots.max() >= store.capacity:
+            return False
+
+        rows = batch[order].astype(np.float32)
+        data_np = np.asarray(store.data).copy()
+        norms_np = np.asarray(store.norms).copy()
+        dfs_np = np.asarray(store.rec_dfs).copy()
+        gid_np = np.asarray(store.rec_gid).copy()
+        data_np[ps, slots] = rows
+        # same arithmetic as build_store so a later rebuild is bit-identical
+        norms_np[ps, slots] = \
+            np.sum(rows.astype(np.float64) ** 2, axis=-1).astype(np.float32)
+        dfs_np[ps, slots] = rec_dfs[order]
+        gid_np[ps, slots] = (base + order).astype(np.int32)
+        np.add.at(count, ps, 1)
+        new_store = PartitionStore(
+            data=jnp.asarray(data_np), norms=jnp.asarray(norms_np),
+            rec_dfs=jnp.asarray(dfs_np), rec_gid=jnp.asarray(gid_np),
+            count=jnp.asarray(count))
+        self.index = dataclasses.replace(idx, store=new_store)
+        return True
+
+    def take(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Hand the accumulated contents to compaction and reset."""
+        out = (self.data, self.global_ids)
+        self.data = np.zeros((0, self.cfg.series_len), np.float32)
+        self.global_ids = np.zeros((0,), np.int32)
+        self.index = None
+        return out
+
+    # -- query ------------------------------------------------------------
+    def _bootstrap_store(self) -> PartitionStore:
+        return build_store(jnp.asarray(self.data),
+                           np.zeros(self.occupancy, np.int32),
+                           np.zeros(self.occupancy, np.int32), 1)
+
+    def store(self) -> Optional[PartitionStore]:
+        if not self.occupancy:
+            return None
+        return self.index.store if self.index is not None \
+            else self._bootstrap_store()
+
+    def query(self, queries: np.ndarray, k: int, *, variant: str,
+              use_kernel: bool = False):
+        """(dist, gid_local, touched, scanned) or None when empty."""
+        if not self.occupancy:
+            return None
+        q = len(queries)
+        if self.index is None:
+            store = self._bootstrap_store()
+            sel = jnp.zeros((q, 1), jnp.int32)
+            dist, gid = refine(store, jnp.asarray(queries), sel, sel,
+                               sel + 1, k, use_kernel=use_kernel)
+            return (np.asarray(dist), np.asarray(gid),
+                    np.ones(q, np.int64),
+                    np.full(q, self.occupancy, np.int64))
+        dist, gid, qp = knn_query(self.index, jnp.asarray(queries), k,
+                                  variant=variant, use_kernel=use_kernel)
+        return (np.asarray(dist), np.asarray(gid),
+                np.asarray(qp.partitions_touched(), np.int64),
+                np.asarray(candidates_scanned(qp, self.index.store),
+                           np.int64))
+
+
+class IndexFleet:
+    """Several CLIMBER shards + streaming delta behind one query surface."""
+
+    DELTA_KEY = "__delta__"
+
+    def __init__(self, cfg: FleetConfig):
+        self.cfg = cfg
+        self.shards: List[ShardHandle] = []
+        self.router: Optional[SignatureRouter] = None
+        self.delta = DeltaShard(cfg.shard_cfg, pad=cfg.delta_pad,
+                                seed=cfg.seed + 1)
+        self.stats = FleetStats()
+        self._next_gid = 0
+        self._seal_count = 0
+
+    # -- membership -------------------------------------------------------
+    @property
+    def total_records(self) -> int:
+        return sum(s.num_records for s in self.shards) + self.delta.occupancy
+
+    def _ensure_router(self, sample: np.ndarray) -> None:
+        """Build the reference pivots once enough rows exist.
+
+        Pivot selection needs ``num_pivots`` distinct samples; until then
+        the router stays None and queries fall back to exhaustive fan-out
+        (there is at most a bootstrap delta to scan anyway).
+        """
+        if self.router is None and \
+                len(sample) >= self.cfg.shard_cfg.num_pivots:
+            self.router = SignatureRouter.from_sample(
+                jax.random.PRNGKey(self.cfg.seed),
+                sample[: max(4 * self.cfg.shard_cfg.num_pivots, 256)],
+                self.cfg.shard_cfg)
+
+    def add_shard(self, key: str, data: np.ndarray,
+                  global_ids: Optional[np.ndarray] = None) -> ShardHandle:
+        """Build and register an immutable shard over ``data``.
+
+        ``global_ids`` defaults to the next contiguous fleet-global range.
+        """
+        data = np.asarray(data, dtype=np.float32)
+        if any(s.key == key for s in self.shards):
+            raise ValueError(f"duplicate shard key {key!r}")
+        if global_ids is None:
+            global_ids = np.arange(self._next_gid,
+                                   self._next_gid + len(data), dtype=np.int32)
+        global_ids = np.asarray(global_ids, dtype=np.int32)
+        if len(global_ids):
+            self._next_gid = max(self._next_gid, int(global_ids.max()) + 1)
+        build_key = jax.random.fold_in(
+            jax.random.PRNGKey(self.cfg.seed), len(self.shards) + 17)
+        index = build_index(build_key, jnp.asarray(data), self.cfg.shard_cfg)
+        self._ensure_router(data)
+        handle = ShardHandle(key=key, index=index, global_ids=global_ids)
+        self.shards.append(handle)
+        self.router.register(key, self.router.summarize(data))
+        return handle
+
+    # -- streaming ingest -------------------------------------------------
+    def insert(self, batch: np.ndarray) -> np.ndarray:
+        """Append a batch; returns the assigned global record ids.
+
+        Records are immediately visible to queries (the delta is always
+        scanned).  When the delta reaches ``delta_capacity`` and
+        ``auto_compact`` is on, it is sealed into an immutable shard.
+        """
+        batch = np.asarray(batch, dtype=np.float32)
+        if batch.ndim != 2 or batch.shape[1] != self.cfg.shard_cfg.series_len:
+            raise ValueError(f"insert batch shape {batch.shape} != "
+                             f"[B, {self.cfg.shard_cfg.series_len}]")
+        gids = np.arange(self._next_gid, self._next_gid + len(batch),
+                         dtype=np.int32)
+        self._next_gid += len(batch)
+        before = self.delta.rebuilds
+        self.delta.insert(batch, gids)
+        # accumulated delta contents, not just this batch: small first
+        # batches must not stop the router from ever being built
+        self._ensure_router(self.delta.data)
+        self.stats.delta_rebuilds += self.delta.rebuilds - before
+        self.stats.inserts += len(batch)
+        self.stats.delta_occupancy = self.delta.occupancy
+        if self.cfg.auto_compact and \
+                self.delta.occupancy >= max(self.cfg.delta_capacity,
+                                            self.delta.min_build):
+            self.compact()
+        return gids
+
+    def compact(self) -> Optional[ShardHandle]:
+        """Seal the delta into an immutable shard (full INX rebuild).
+
+        The delta is reset only after the shard build succeeds, so a failed
+        build leaves every buffered insert queryable in place.
+        """
+        if not self.delta.occupancy:
+            return None
+        if self.delta.occupancy < self.delta.min_build:
+            raise ValueError(
+                f"cannot compact {self.delta.occupancy} records: pivot "
+                f"selection needs >= {self.delta.min_build}; keep inserting "
+                f"or lower shard_cfg.num_pivots")
+        self._seal_count += 1
+        while any(s.key == f"sealed:{self._seal_count}"
+                  for s in self.shards):
+            self._seal_count += 1
+        handle = self.add_shard(f"sealed:{self._seal_count}",
+                                self.delta.data,
+                                global_ids=self.delta.global_ids)
+        self.delta.take()
+        self.stats.compactions += 1
+        self.stats.delta_occupancy = 0
+        return handle
+
+    # -- query ------------------------------------------------------------
+    def query(self, queries: np.ndarray, k: int = 0, *,
+              routing: str = "signature", variant: str = "adaptive",
+              use_kernel: bool = False, fanout: Optional[int] = None
+              ) -> Tuple[np.ndarray, np.ndarray, FleetQueryInfo]:
+        """Fan out, per-shard kNN, fuse with ``merge_topk``.
+
+        Args:
+          routing: ``"signature"`` routes each query to the ``fanout``
+            best-scoring sealed shards; ``"exhaustive"`` executes every
+            shard (lossless fan-out).  The delta is always executed.
+          variant: per-shard planner variant; ``"exhaustive"`` makes each
+            shard exact, so exhaustive routing + exhaustive variant equals
+            brute-force over the fleet contents.
+
+        Returns:
+          (dist ``[Q, k]``, gid ``[Q, k]`` fleet-global ids, info).
+        """
+        if routing not in ("signature", "exhaustive"):
+            raise ValueError(f"unknown routing mode {routing!r}")
+        queries = np.asarray(queries, dtype=np.float32)
+        if queries.ndim != 2:
+            raise ValueError(f"queries must be [Q, n], got {queries.shape}")
+        k = k or self.cfg.shard_cfg.k
+        qn = len(queries)
+        best_d = np.full((qn, k), PAD_DIST, np.float32)
+        best_g = np.full((qn, k), -1, np.int32)
+        touched = np.zeros(qn, np.int64)
+        scanned = np.zeros(qn, np.int64)
+        s = len(self.shards)
+
+        if routing == "exhaustive" or self.router is None or s == 0:
+            mask = np.ones((qn, s), dtype=bool)
+        else:
+            mask = self.router.route(queries, fanout or self.cfg.fanout)
+
+        for si, shard in enumerate(self.shards):
+            qsel = np.nonzero(mask[:, si])[0]
+            if not len(qsel):
+                continue
+            dist, gid, qp = knn_query(shard.index,
+                                      jnp.asarray(queries[qsel]), k,
+                                      variant=variant, use_kernel=use_kernel)
+            dist, gid = np.asarray(dist), np.asarray(gid)
+            gg = np.where(gid >= 0,
+                          shard.global_ids[np.maximum(gid, 0)],
+                          -1).astype(np.int32)
+            md, mg = merge_topk(jnp.asarray(best_d[qsel]),
+                                jnp.asarray(best_g[qsel]),
+                                jnp.asarray(dist), jnp.asarray(gg), k)
+            best_d[qsel] = np.asarray(md)
+            best_g[qsel] = np.asarray(mg)
+            pt = np.asarray(qp.partitions_touched(), np.int64)
+            touched[qsel] += pt
+            scanned[qsel] += np.asarray(
+                candidates_scanned(qp, shard.index.store), np.int64)
+            self.stats.observe_shard(shard.key, len(qsel), int(pt.sum()))
+
+        delta_res = self.delta.query(queries, k, variant=variant,
+                                     use_kernel=use_kernel)
+        if delta_res is not None:
+            dist, gid, dt, dsc = delta_res
+            gg = np.where(gid >= 0,
+                          self.delta.global_ids[np.maximum(gid, 0)],
+                          -1).astype(np.int32)
+            md, mg = merge_topk(jnp.asarray(best_d), jnp.asarray(best_g),
+                                jnp.asarray(dist), jnp.asarray(gg), k)
+            best_d, best_g = np.asarray(md), np.asarray(mg)
+            touched += dt
+            scanned += dsc
+            self.stats.observe_shard(self.DELTA_KEY, qn, int(dt.sum()))
+
+        self.stats.queries += qn
+        self.stats.routed_pairs += int(mask.sum())
+        self.stats.exhaustive_pairs += qn * s
+        return best_d, best_g, FleetQueryInfo(
+            partitions_touched=touched, candidates_scanned=scanned,
+            routed_mask=mask)
+
+    def scan_exact(self, queries: np.ndarray, k: int = 0, *,
+                   use_kernel: bool = False
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Lossless fallback as a *single* refine over the fused store.
+
+        Concatenates every shard store (global-id remapped) and runs one
+        exhaustive ``dispatch_refine`` — the fleet answer without any
+        per-shard scatter/gather, equal to exhaustive-routing +
+        exhaustive-variant :meth:`query`.
+        """
+        queries = np.asarray(queries, dtype=np.float32)
+        k = k or self.cfg.shard_cfg.k
+        stores = [s.index.store for s in self.shards]
+        gid_maps = [s.global_ids for s in self.shards]
+        dstore = self.delta.store()
+        if dstore is not None:
+            stores.append(dstore)
+            gid_maps.append(self.delta.global_ids)
+        if not stores:
+            return (np.full((len(queries), k), PAD_DIST, np.float32),
+                    np.full((len(queries), k), -1, np.int32))
+        union = concat_stores(stores, gid_maps)
+        sel, lo, hi = exhaustive_selection(union.num_partitions,
+                                           len(queries))
+        dist, gid = dispatch_refine(union, jnp.asarray(queries), sel, lo, hi,
+                                    k, use_kernel=use_kernel)
+        return np.asarray(dist), np.asarray(gid)
+
+    def audit_routing(self, queries: np.ndarray, k: int = 0, *,
+                      variant: str = "adaptive") -> float:
+        """Measure routed-mode precision against the exhaustive oracle.
+
+        Returns the mean fraction of the exhaustive fan-out's answers the
+        routed fan-out also returned, and folds it into
+        ``stats.routing_precision``.
+        """
+        k = k or self.cfg.shard_cfg.k
+        _, g_routed, _ = self.query(queries, k, routing="signature",
+                                    variant=variant)
+        _, g_full, _ = self.query(queries, k, routing="exhaustive",
+                                  variant=variant)
+        overlaps = []
+        for gr, gf in zip(g_routed, g_full):
+            truth = set(int(x) for x in gf if x >= 0)
+            if not truth:
+                continue
+            got = set(int(x) for x in gr if x >= 0)
+            overlaps.append(len(got & truth) / len(truth))
+        precision = float(np.mean(overlaps)) if overlaps else 1.0
+        self.stats.routing_audits += 1
+        self.stats.routing_overlap += precision
+        return precision

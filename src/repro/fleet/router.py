@@ -1,0 +1,100 @@
+"""Signature-prefix query routing across index shards.
+
+Every shard of a fleet is a full CLIMBER index with its *own* pivots, so a
+query's per-shard signature is only computable by featurizing against each
+shard — too expensive as a routing primitive.  The router therefore owns one
+fleet-level reference pivot set and describes each shard by a **pivot
+summary**: the decay-weighted frequency profile of the shard's records'
+P4→ rank-signature prefixes under those reference pivots (Def. 9 weights —
+the same decay the OD/WD ladder uses, so a pivot that is the nearest
+neighbour of many shard records dominates the summary).
+
+Routing scores a query's own weighted signature profile against every
+summary with one ``[Q, r] @ [r, S]`` matmul and fans out to the top
+``fanout`` shards per query.  Exhaustive fan-out (every shard) is the
+lossless fallback — the Lernaean-Hydra lesson is that naive candidate
+pruning collapses recall, so the routed mode is always an explicit,
+measurable trade (``IndexFleet.audit_routing`` reports its precision
+against the exhaustive oracle).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paa import paa
+from repro.core.pivots import select_pivots
+from repro.core.signatures import (decay_weights, rank_signature,
+                                   weighted_onehot)
+from repro.utils.config import ClimberConfig
+
+
+class SignatureRouter:
+    """Scores query signature profiles against per-shard pivot summaries."""
+
+    def __init__(self, pivots: jnp.ndarray, cfg: ClimberConfig):
+        self.pivots = pivots                       # [r, w] reference pivots
+        self.cfg = cfg
+        self._weights = decay_weights(cfg.prefix_len, cfg.decay,
+                                      cfg.decay_lambda)
+        self.keys: List[str] = []
+        self._summaries: List[np.ndarray] = []     # each [r], L2-normalized
+
+    @classmethod
+    def from_sample(cls, key: jax.Array, sample: np.ndarray,
+                    cfg: ClimberConfig, *,
+                    pivot_method: str = "random") -> "SignatureRouter":
+        """Build the reference pivots from the first data the fleet sees."""
+        z = paa(jnp.asarray(sample, dtype=jnp.float32), cfg.paa_segments)
+        pivots = select_pivots(key, z, cfg.num_pivots, method=pivot_method)
+        return cls(pivots, cfg)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self._summaries)
+
+    # -- profiles ---------------------------------------------------------
+    def signature_profile(self, series: np.ndarray) -> np.ndarray:
+        """``[N, r]`` decay-weighted P4→ profile under the reference pivots."""
+        z = paa(jnp.asarray(series, dtype=jnp.float32),
+                self.cfg.paa_segments)
+        p4r = rank_signature(z, self.pivots, self.cfg.prefix_len)
+        prof = weighted_onehot(p4r, self.pivots.shape[0], self._weights)
+        return np.asarray(prof)
+
+    def summarize(self, series: np.ndarray) -> np.ndarray:
+        """One shard's pivot summary: its records' mean profile, normalized."""
+        prof = self.signature_profile(series).sum(axis=0)
+        norm = float(np.linalg.norm(prof))
+        return (prof / norm if norm else prof).astype(np.float32)
+
+    # -- shard registry (parallel to the fleet's shard list) --------------
+    def register(self, key: str, summary: np.ndarray) -> None:
+        self.keys.append(key)
+        self._summaries.append(np.asarray(summary, dtype=np.float32))
+
+    # -- routing ----------------------------------------------------------
+    def score(self, queries: np.ndarray) -> np.ndarray:
+        """``[Q, S]`` affinity of each query to each registered shard."""
+        if not self._summaries:
+            return np.zeros((len(queries), 0), np.float32)
+        prof = self.signature_profile(queries)             # [Q, r]
+        return prof @ np.stack(self._summaries, axis=1)    # [Q, S]
+
+    def route(self, queries: np.ndarray, fanout: int,
+              scores: Optional[np.ndarray] = None) -> np.ndarray:
+        """Boolean ``[Q, S]`` mask of the top-``fanout`` shards per query."""
+        s = self.num_shards
+        mask = np.zeros((len(queries), s), dtype=bool)
+        if s == 0:
+            return mask
+        if fanout >= s:
+            mask[:] = True
+            return mask
+        sc = self.score(queries) if scores is None else scores
+        top = np.argpartition(-sc, fanout - 1, axis=-1)[:, :fanout]
+        np.put_along_axis(mask, top, True, axis=-1)
+        return mask

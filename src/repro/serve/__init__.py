@@ -1,3 +1,3 @@
 from repro.serve.engine import Engine, Request
-from repro.serve.knn_engine import (ClimberEngine, EngineStats, QueryMetrics,
-                                    QueryRequest)
+from repro.serve.knn_engine import (BatchedServingLoop, ClimberEngine,
+                                    EngineStats, QueryMetrics, QueryRequest)

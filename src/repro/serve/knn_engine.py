@@ -15,6 +15,19 @@ dropped.  Planning and refine are row-independent (per-row top_k /
 arg-reductions only), so a query's (dist, gid) is bit-identical whichever
 batch it rides in — ``run`` on a big batch equals per-query ``knn_query``.
 
+Query plan cache: a plan depends only on the query's P4→ rank signature
+(and the frozen index), so the engine memoizes compacted plan rows in an
+LRU keyed on the signature prefix.  The pipeline is staged as three jits —
+featurize → plan → refine — and a tick whose live rows all hit the cache
+skips the planning stage (assignment-distance matmuls + trie descent)
+entirely; any miss re-plans the whole fixed-shape batch and refreshes every
+row's cache entry.  Cached rows are exactly a prior plan stage's output, so
+caching never changes results.  ``EngineStats`` counts per-row hits/misses.
+
+The admission machinery (request queue, fixed-shape ticks, per-query
+metrics) lives in :class:`BatchedServingLoop` so other executors — e.g. the
+fleet engine (``repro.fleet``) — serve through the identical loop.
+
 Per-query metrics (partitions touched, candidates scanned, latency,
 batch fill) ride on every completed request; ``EngineStats`` aggregates
 them into the queries/sec numbers the benchmarks report.
@@ -23,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import List, Optional, Tuple
 
 import jax
@@ -65,6 +79,8 @@ class EngineStats:
     total_s: float = 0.0
     partitions_touched: float = 0.0          # running sums (means below)
     candidates_scanned: float = 0.0
+    plan_cache_hits: int = 0                 # per-row signature-cache hits
+    plan_cache_misses: int = 0
 
     def observe(self, batch_metrics: List[QueryMetrics]) -> None:
         self.ticks += 1
@@ -87,87 +103,37 @@ class EngineStats:
     def mean_candidates_scanned(self) -> float:
         return self.candidates_scanned / self.queries if self.queries else 0.0
 
+    @property
+    def plan_cache_hit_rate(self) -> float:
+        n = self.plan_cache_hits + self.plan_cache_misses
+        return self.plan_cache_hits / n if n else 0.0
 
-class ClimberEngine:
-    """Batched, sharded, kernel-first kNN serving loop.
 
-    Args:
-      index: a built ClimberIndex.  With ``mesh`` given, the store is laid
-        out over the mesh's data axis at construction (ragged partition
-        counts are padded), so every tick runs the shard_map refine.
-      batch_size: rows per tick — the one static batch shape that jits.
-      variant: registered planner name ("knn" | "adaptive" | "od_smallest"
-        or anything added via ``register_planner``).
-      k: default answer size (0 => ``cfg.k``).
-      use_kernel: route the refine distance loop through the Pallas kernel.
-      max_slots: static slot budget for plan compaction (None => the
-        lossless ``default_slot_budget`` unless ``cfg.query_max_slots``
-        overrides it; stays None — i.e. no compaction — for
-        user-registered variants with no knowable lossless bound).
+class BatchedServingLoop:
+    """Fixed-shape batch admission shared by every serving executor.
 
-    The configuration (variant, k, backend, budget, store layout) is baked
-    into the compiled pipeline at construction; mutating these attributes
-    afterwards has no effect on the cached trace — build a new engine
-    instead.
+    Subclasses implement :meth:`_execute`, which serves one zero-padded
+    ``[batch_size, series_len]`` tick and returns host arrays
+    ``(dist, gid, partitions_touched, candidates_scanned, seconds)``.
     """
 
-    def __init__(self, index: ClimberIndex, *, batch_size: int = 8,
-                 variant: str = "adaptive", k: int = 0,
-                 use_kernel: bool = False, mesh=None,
-                 data_axis: str = "data",
-                 max_slots: Optional[int] = None):
-        get_planner(variant)                 # fail fast on unknown variants
+    def __init__(self, *, series_len: int, batch_size: int, k: int):
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
-        self.index = index
+        self.series_len = series_len
         self.batch_size = batch_size
-        self.variant = variant
-        self.k = k or index.cfg.k
-        self.use_kernel = use_kernel
-        self.mesh = mesh
-        self.data_axis = data_axis
-        if max_slots is None:
-            max_slots = index.cfg.query_max_slots
-        if max_slots is None:
-            max_slots = default_slot_budget(index, variant)
-        self.max_slots = max_slots
-
-        self.store = index.store
-        if mesh is not None and mesh.shape[data_axis] > 1:
-            from repro.distributed.store import shard_store
-            self.store = shard_store(index.store, mesh, data_axis=data_axis)
-
+        self.k = k
         self.queue: List[QueryRequest] = []
         self.stats = EngineStats()
-        self._exec = jax.jit(self._pipeline)
 
-    # -- the one fused pipeline (plan → compact → dispatch refine) --------
-    def _pipeline(self, queries: jnp.ndarray):
-        index = self.index
-        p4r, _ = index.featurize(queries)
-        qp = plan_queries(index, p4r, variant=self.variant,
-                          max_slots=self.max_slots)
-        dist, gid = dispatch_refine(
-            self.store, queries, qp.sel_part, qp.sel_lo, qp.sel_hi, self.k,
-            mesh=self.mesh, data_axis=self.data_axis,
-            use_kernel=self.use_kernel)
-        return dist, gid, qp.partitions_touched(), \
-            candidates_scanned(qp, self.store)
-
-    def _execute(self, qbatch: np.ndarray):
-        """One fixed-shape tick.  Returns host arrays + wall seconds."""
-        t0 = time.perf_counter()
-        dist, gid, touched, scanned = self._exec(jnp.asarray(qbatch))
-        jax.block_until_ready(gid)
-        dt = time.perf_counter() - t0
-        return (np.asarray(dist), np.asarray(gid), np.asarray(touched),
-                np.asarray(scanned), dt)
+    def _execute(self, qbatch: np.ndarray, nlive: int):
+        raise NotImplementedError
 
     # -- request-queue serving -------------------------------------------
     def submit(self, req: QueryRequest) -> None:
         """Enqueue a request (rejects malformed ones before they can
         poison a whole batch)."""
-        n = self.index.cfg.series_len
+        n = self.series_len
         series = np.asarray(req.series, dtype=np.float32)
         if series.shape != (n,):
             raise ValueError(f"request {req.rid}: series shape "
@@ -183,13 +149,13 @@ class ClimberEngine:
         if not self.queue:
             return 0
         live = self.queue[:min(self.batch_size, len(self.queue))]
-        n = self.index.cfg.series_len
-        qbatch = np.zeros((self.batch_size, n), dtype=np.float32)
+        qbatch = np.zeros((self.batch_size, self.series_len),
+                          dtype=np.float32)
         for i, req in enumerate(live):
             qbatch[i] = req.series
         # pop only after the tick succeeds: a device error leaves the
         # queue intact instead of dropping in-flight requests
-        dist, gid, touched, scanned, dt = self._execute(qbatch)
+        dist, gid, touched, scanned, dt = self._execute(qbatch, len(live))
         del self.queue[:len(live)]
 
         fill = len(live) / self.batch_size
@@ -235,11 +201,11 @@ class ClimberEngine:
         for lo in range(0, qn, self.batch_size):
             chunk = queries[lo:lo + self.batch_size]
             pad = self.batch_size - chunk.shape[0]
+            nlive = chunk.shape[0]
             if pad:
                 chunk = np.concatenate(
                     [chunk, np.zeros((pad, chunk.shape[1]), np.float32)])
-            dist, gid, touched, scanned, dt = self._execute(chunk)
-            nlive = min(self.batch_size, qn - lo)
+            dist, gid, touched, scanned, dt = self._execute(chunk, nlive)
             dists.append(dist[:nlive, :kq])
             gids.append(gid[:nlive, :kq])
             batch_metrics = [
@@ -251,3 +217,128 @@ class ClimberEngine:
             metrics.extend(batch_metrics)
             self.stats.observe(batch_metrics)
         return np.concatenate(dists), np.concatenate(gids), metrics
+
+
+class ClimberEngine(BatchedServingLoop):
+    """Batched, sharded, kernel-first kNN serving loop.
+
+    Args:
+      index: a built ClimberIndex.  With ``mesh`` given, the store is laid
+        out over the mesh's data axis at construction (ragged partition
+        counts are padded), so every tick runs the shard_map refine.
+      batch_size: rows per tick — the one static batch shape that jits.
+      variant: registered planner name ("knn" | "adaptive" | "od_smallest" |
+        "exhaustive" or anything added via ``register_planner``).
+      k: default answer size (0 => ``cfg.k``).
+      use_kernel: route the refine distance loop through the Pallas kernel.
+      max_slots: static slot budget for plan compaction (None => the
+        lossless ``default_slot_budget`` unless ``cfg.query_max_slots``
+        overrides it; stays None — i.e. no compaction — for
+        user-registered variants with no knowable lossless bound).
+      plan_cache_size: LRU capacity of the signature→plan cache (0 turns
+        memoization off; the planning stage then runs every tick).
+
+    The configuration (variant, k, backend, budget, store layout) is baked
+    into the compiled pipeline at construction; mutating these attributes
+    afterwards has no effect on the cached trace — build a new engine
+    instead.
+    """
+
+    def __init__(self, index: ClimberIndex, *, batch_size: int = 8,
+                 variant: str = "adaptive", k: int = 0,
+                 use_kernel: bool = False, mesh=None,
+                 data_axis: str = "data",
+                 max_slots: Optional[int] = None,
+                 plan_cache_size: int = 256):
+        get_planner(variant)                 # fail fast on unknown variants
+        super().__init__(series_len=index.cfg.series_len,
+                         batch_size=batch_size, k=k or index.cfg.k)
+        self.index = index
+        self.variant = variant
+        self.use_kernel = use_kernel
+        self.mesh = mesh
+        self.data_axis = data_axis
+        if max_slots is None:
+            max_slots = index.cfg.query_max_slots
+        if max_slots is None:
+            max_slots = default_slot_budget(index, variant)
+        self.max_slots = max_slots
+
+        self.store = index.store
+        if mesh is not None and mesh.shape[data_axis] > 1:
+            from repro.distributed.store import shard_store
+            self.store = shard_store(index.store, mesh, data_axis=data_axis)
+
+        self.plan_cache_size = plan_cache_size
+        # signature bytes → (sel_part, sel_lo, sel_hi, touched, scanned) rows
+        self._plan_cache: "OrderedDict[bytes, tuple]" = OrderedDict()
+
+        self._featurize = jax.jit(lambda q: self.index.featurize(q)[0])
+        self._plan = jax.jit(self._plan_fn)
+        self._refine = jax.jit(self._refine_fn)
+
+    # -- the staged pipeline (featurize → plan → dispatch refine) ---------
+    def _plan_fn(self, p4r: jnp.ndarray):
+        qp = plan_queries(self.index, p4r, variant=self.variant,
+                          max_slots=self.max_slots)
+        return (qp.sel_part, qp.sel_lo, qp.sel_hi, qp.partitions_touched(),
+                candidates_scanned(qp, self.store))
+
+    def _refine_fn(self, queries, sel_part, sel_lo, sel_hi):
+        return dispatch_refine(
+            self.store, queries, sel_part, sel_lo, sel_hi, self.k,
+            mesh=self.mesh, data_axis=self.data_axis,
+            use_kernel=self.use_kernel)
+
+    def _plan_batch(self, p4r: jnp.ndarray, nlive: int):
+        """Plan a tick's batch through the signature LRU.
+
+        All live rows cached → assemble the plan on the host and skip the
+        planning jit; otherwise plan the whole fixed-shape batch (static
+        shapes) and refresh every live row's entry.
+        """
+        if not self.plan_cache_size:
+            return self._plan(p4r)
+        p4_host = np.asarray(p4r)            # one transfer for all rows
+        keys = [p4_host[i].tobytes() for i in range(nlive)]
+        rows = [self._plan_cache.get(kk) for kk in keys]
+        hits = sum(r is not None for r in rows)
+        self.stats.plan_cache_hits += hits
+        self.stats.plan_cache_misses += nlive - hits
+        if hits == nlive and nlive:
+            for kk in keys:
+                self._plan_cache.move_to_end(kk)
+            bs = self.batch_size
+            mp = rows[0][0].shape[-1]
+            sel_part = np.full((bs, mp), -1, np.int32)
+            sel_lo = np.zeros((bs, mp), np.int32)
+            sel_hi = np.zeros((bs, mp), np.int32)
+            touched = np.zeros(bs, np.int32)
+            scanned = np.zeros(bs, np.int32)
+            for i, r in enumerate(rows):
+                sel_part[i], sel_lo[i], sel_hi[i], touched[i], scanned[i] = r
+            return (jnp.asarray(sel_part), jnp.asarray(sel_lo),
+                    jnp.asarray(sel_hi), touched, scanned)
+        out = self._plan(p4r)
+        sp, lo, hi, touched, scanned = (np.asarray(x) for x in out)
+        for i, kk in enumerate(keys):
+            self._plan_cache[kk] = (sp[i], lo[i], hi[i],
+                                    touched[i], scanned[i])
+            self._plan_cache.move_to_end(kk)
+        while len(self._plan_cache) > self.plan_cache_size:
+            self._plan_cache.popitem(last=False)
+        return out
+
+    def _execute(self, qbatch: np.ndarray, nlive: int):
+        """One fixed-shape tick.  Returns host arrays + wall seconds."""
+        t0 = time.perf_counter()
+        qb = jnp.asarray(qbatch)
+        p4r = self._featurize(qb)
+        sel_part, sel_lo, sel_hi, touched, scanned = \
+            self._plan_batch(p4r, nlive)
+        dist, gid = self._refine(qb, jnp.asarray(sel_part),
+                                 jnp.asarray(sel_lo), jnp.asarray(sel_hi))
+        jax.block_until_ready(gid)
+        dt = time.perf_counter() - t0
+        return (np.asarray(dist), np.asarray(gid), np.asarray(touched),
+                np.asarray(scanned), dt)

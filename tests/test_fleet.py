@@ -1,0 +1,282 @@
+"""IndexFleet acceptance tests.
+
+The two hard contracts from the issue:
+  * exhaustive-routing + exhaustive-variant fleet results are bit-identical
+    to a single-index ``knn_query`` over the concatenated data;
+  * ``compact()`` does not change query results on the same fleet contents.
+Plus: signature routing, streaming ingest through the assignment path,
+global-id stability, and the FleetEngine serving loop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import exact_knn
+from repro.core import build_index, knn_query
+from repro.data import make_dataset, make_queries
+from repro.fleet import FleetConfig, FleetEngine, IndexFleet
+from repro.serve import QueryRequest
+from repro.utils.config import ClimberConfig
+
+K = 10
+
+
+def small_cfg() -> ClimberConfig:
+    return ClimberConfig(series_len=64, paa_segments=8, num_pivots=32,
+                         prefix_len=5, capacity=128, sample_frac=0.3,
+                         max_centroids=12, k=K, candidate_groups=4,
+                         adaptive_factor=4)
+
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    cfg = small_cfg()
+    data = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(0),
+                                   2400, 64))
+    queries = np.asarray(make_queries(jax.random.PRNGKey(2),
+                                      jnp.asarray(data), 7))
+    fleet = IndexFleet(FleetConfig(shard_cfg=cfg, fanout=2,
+                                   delta_capacity=4096, auto_compact=False))
+    for i in range(3):
+        fleet.add_shard(f"tenant{i}", data[i * 800:(i + 1) * 800])
+    return fleet, data, queries
+
+
+class TestExhaustiveEquivalence:
+    def test_bit_identical_to_union_index(self, fleet_setup):
+        """Acceptance: exhaustive fan-out + exhaustive per-shard variant ==
+        single-index knn_query over the concatenated data, bit for bit."""
+        fleet, data, queries = fleet_setup
+        union = build_index(jax.random.PRNGKey(1), jnp.asarray(data),
+                            fleet.cfg.shard_cfg)
+        du, gu, _ = knn_query(union, jnp.asarray(queries), K,
+                              variant="exhaustive")
+        df, gf, _ = fleet.query(queries, K, routing="exhaustive",
+                                variant="exhaustive")
+        np.testing.assert_array_equal(np.asarray(gu), gf)
+        np.testing.assert_array_equal(np.asarray(du), df)
+
+    def test_equals_brute_force(self, fleet_setup):
+        fleet, data, queries = fleet_setup
+        _, exact_ids = exact_knn(jnp.asarray(queries), jnp.asarray(data), K)
+        _, gf, _ = fleet.query(queries, K, routing="exhaustive",
+                               variant="exhaustive")
+        for i in range(len(queries)):
+            assert set(gf[i].tolist()) == set(np.asarray(exact_ids)[i].tolist())
+
+    def test_scan_exact_matches_per_shard_fanout(self, fleet_setup):
+        """The fused-store fallback (one refine over concat_stores) equals
+        the per-shard scatter/gather + merge_topk path."""
+        fleet, _, queries = fleet_setup
+        df, gf, _ = fleet.query(queries, K, routing="exhaustive",
+                                variant="exhaustive")
+        ds, gs = fleet.scan_exact(queries, K)
+        np.testing.assert_array_equal(gs, gf)
+        np.testing.assert_array_equal(ds, df)
+
+    def test_empty_fleet_returns_pads(self):
+        fleet = IndexFleet(FleetConfig(shard_cfg=small_cfg()))
+        q = np.zeros((2, 64), np.float32)
+        d, g, info = fleet.query(q, K)
+        assert (g == -1).all()
+        d2, g2 = fleet.scan_exact(q, K)
+        assert (g2 == -1).all()
+
+
+class TestSignatureRouting:
+    def test_routes_subset_and_tracks_stats(self, fleet_setup):
+        fleet, _, queries = fleet_setup
+        before = fleet.stats.routed_pairs
+        _, _, info = fleet.query(queries, K, routing="signature")
+        assert info.routed_mask.shape == (len(queries), len(fleet.shards))
+        np.testing.assert_array_equal(info.routed_mask.sum(axis=1),
+                                      np.full(len(queries), 2))
+        assert fleet.stats.routed_pairs - before == int(info.routed_mask.sum())
+        assert fleet.stats.fanout_savings > 0
+
+    def test_full_fanout_equals_exhaustive_routing(self, fleet_setup):
+        """fanout >= #shards must reproduce exhaustive routing exactly."""
+        fleet, _, queries = fleet_setup
+        d1, g1, _ = fleet.query(queries, K, routing="signature",
+                                fanout=len(fleet.shards))
+        d2, g2, _ = fleet.query(queries, K, routing="exhaustive")
+        np.testing.assert_array_equal(g1, g2)
+        np.testing.assert_array_equal(d1, d2)
+
+    def test_audit_precision_bounds(self, fleet_setup):
+        fleet, _, queries = fleet_setup
+        p = fleet.audit_routing(queries, K)
+        assert 0.0 <= p <= 1.0
+        assert fleet.stats.routing_audits >= 1
+        assert fleet.stats.routing_precision == pytest.approx(
+            fleet.stats.routing_overlap / fleet.stats.routing_audits)
+
+    def test_unknown_routing_mode(self, fleet_setup):
+        fleet, _, queries = fleet_setup
+        with pytest.raises(ValueError, match="routing"):
+            fleet.query(queries, K, routing="nope")
+
+
+class TestStreamingIngest:
+    def make_fleet(self, **kw):
+        cfg = small_cfg()
+        data = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(3),
+                                       1600, 64))
+        fc = dict(shard_cfg=cfg, fanout=2, delta_capacity=4096,
+                  auto_compact=False)
+        fc.update(kw)
+        fleet = IndexFleet(FleetConfig(**fc))
+        fleet.add_shard("t0", data[:800])
+        fleet.add_shard("t1", data[800:])
+        return fleet, data
+
+    def test_insert_assigns_contiguous_global_ids(self):
+        fleet, data = self.make_fleet()
+        batch = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(4),
+                                        50, 64))
+        gids = fleet.insert(batch)
+        np.testing.assert_array_equal(gids, np.arange(1600, 1650))
+        assert fleet.total_records == 1650
+        assert fleet.delta.occupancy == 50
+        assert fleet.stats.delta_occupancy == 50
+
+    def test_inserted_record_immediately_visible(self):
+        fleet, data = self.make_fleet()
+        dup = data[7:8]
+        gid = fleet.insert(dup)[0]
+        d, g, _ = fleet.query(dup, K, routing="exhaustive",
+                              variant="exhaustive")
+        assert 7 in g[0] and gid in g[0]
+        # self-distance through the float32 norm trick is only zero up to
+        # cancellation noise
+        assert d[0, 0] < 1e-2
+
+    def test_delta_absorbs_through_assignment_path(self):
+        """Once the delta index exists, further batches scatter into free
+        partition slots without a rebuild."""
+        fleet, _ = self.make_fleet()
+        big = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(5),
+                                      100, 64))
+        fleet.insert(big)                       # crosses min_build → rebuild
+        assert fleet.delta.index is not None
+        rebuilds = fleet.delta.rebuilds
+        fleet.insert(big[:30] * 1.1)            # small batch → in-place
+        assert fleet.delta.rebuilds == rebuilds
+        assert fleet.delta.occupancy == 130
+        # the scattered records are served through the delta's planner
+        d, g, _ = fleet.query(big[:2] * 1.1, K, routing="exhaustive",
+                              variant="exhaustive")
+        assert d[0, 0] < 1e-2 and d[1, 0] < 1e-2
+
+    def test_compact_preserves_results(self):
+        """Acceptance: post-compact results equal pre-compact results."""
+        fleet, _ = self.make_fleet()
+        batch = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(6),
+                                        120, 64))
+        fleet.insert(batch)
+        queries = np.asarray(make_queries(
+            jax.random.PRNGKey(7), jnp.asarray(batch), 5))
+        d1, g1, _ = fleet.query(queries, K, routing="exhaustive",
+                                variant="exhaustive")
+        handle = fleet.compact()
+        assert handle is not None and handle.sealed
+        assert fleet.delta.occupancy == 0
+        assert fleet.stats.compactions == 1
+        d2, g2, _ = fleet.query(queries, K, routing="exhaustive",
+                                variant="exhaustive")
+        np.testing.assert_array_equal(g1, g2)
+        np.testing.assert_array_equal(d1, d2)
+        # compacting an empty delta is a no-op
+        assert fleet.compact() is None
+
+    def test_auto_compact_seals_at_capacity(self):
+        fleet, _ = self.make_fleet(delta_capacity=100, auto_compact=True)
+        for i in range(3):
+            fleet.insert(np.asarray(make_dataset(
+                "randomwalk", jax.random.PRNGKey(10 + i), 60, 64)))
+        assert fleet.stats.compactions >= 1
+        assert fleet.delta.occupancy < 100
+        assert any(s.key.startswith("sealed:") for s in fleet.shards)
+
+    def test_small_first_insert_into_empty_fleet(self):
+        """Streaming-first fleet: batches smaller than num_pivots must not
+        crash router construction, and a too-small compact() must refuse
+        without losing the buffered records."""
+        cfg = small_cfg()                    # num_pivots=32
+        fleet = IndexFleet(FleetConfig(shard_cfg=cfg, auto_compact=False))
+        small = np.asarray(make_dataset("randomwalk",
+                                        jax.random.PRNGKey(30), 3, 64))
+        fleet.insert(small)
+        assert fleet.router is None          # deferred until enough rows
+        d, g, _ = fleet.query(small[:1], K)  # exhaustive fallback serves it
+        assert g[0, 0] == 0
+        with pytest.raises(ValueError, match="cannot compact"):
+            fleet.compact()
+        assert fleet.delta.occupancy == 3    # refusal lost nothing
+        fleet.insert(np.asarray(make_dataset(
+            "randomwalk", jax.random.PRNGKey(31), 60, 64)))
+        assert fleet.router is not None      # built from accumulated delta
+        handle = fleet.compact()
+        assert handle is not None
+        assert fleet.delta.occupancy == 0
+        assert fleet.total_records == 63
+
+    def test_insert_rejects_bad_shape(self):
+        fleet, _ = self.make_fleet()
+        with pytest.raises(ValueError, match="insert batch"):
+            fleet.insert(np.zeros((3, 7), np.float32))
+        with pytest.raises(ValueError, match="duplicate shard key"):
+            fleet.add_shard("t0", np.zeros((300, 64), np.float32))
+
+
+class TestFleetEngine:
+    def test_run_matches_fleet_query(self, fleet_setup):
+        fleet, _, queries = fleet_setup
+        eng = FleetEngine(fleet, batch_size=4, k=K, routing="exhaustive",
+                          variant="exhaustive")
+        dist, gid, metrics = eng.run(queries)
+        df, gf, _ = fleet.query(queries, K, routing="exhaustive",
+                                variant="exhaustive")
+        np.testing.assert_array_equal(gid, gf)
+        np.testing.assert_array_equal(dist, df)
+        assert len(metrics) == len(queries)
+        assert all(m.partitions_touched >= 1 for m in metrics)
+
+    def test_queue_mode(self, fleet_setup):
+        fleet, _, queries = fleet_setup
+        eng = FleetEngine(fleet, batch_size=4, k=K)
+        reqs = [QueryRequest(rid=i, series=queries[i], k=5)
+                for i in range(len(queries))]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        assert all(r.done for r in reqs)
+        assert eng.stats.queries == len(queries)
+        assert eng.stats.queries_per_sec > 0
+
+    def test_rejects_bad_requests(self, fleet_setup):
+        fleet, _, queries = fleet_setup
+        eng = FleetEngine(fleet, batch_size=4, k=K)
+        with pytest.raises(ValueError, match="series shape"):
+            eng.submit(QueryRequest(rid=0, series=queries[0][:5]))
+        with pytest.raises(ValueError, match="routing"):
+            FleetEngine(fleet, routing="nope")
+
+
+class TestGlobalIdRemapping:
+    def test_custom_global_ids(self):
+        """Shard-local ids remap through caller-provided global id maps."""
+        cfg = small_cfg()
+        data = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(8),
+                                       600, 64))
+        fleet = IndexFleet(FleetConfig(shard_cfg=cfg))
+        custom = np.arange(600, dtype=np.int32) * 7 + 3
+        fleet.add_shard("t0", data, global_ids=custom)
+        q = data[11:12]
+        _, g, _ = fleet.query(q, K, routing="exhaustive",
+                              variant="exhaustive")
+        assert g[0, 0] == custom[11]
+        # next auto-assigned ids start above the custom range
+        gids = fleet.insert(data[:3])
+        assert gids.min() > custom.max()

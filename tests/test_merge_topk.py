@@ -1,0 +1,94 @@
+"""merge_topk edge cases: under-filled inputs, duplicate global ids across
+inputs, and sentinel-distance padding propagation through merges."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PAD_DIST, merge_topk
+
+PAD = np.float32(PAD_DIST)
+
+
+def _merge(da, ga, db, gb, k, **kw):
+    d, g = merge_topk(jnp.asarray(da, jnp.float32), jnp.asarray(ga, jnp.int32),
+                      jnp.asarray(db, jnp.float32), jnp.asarray(gb, jnp.int32),
+                      k, **kw)
+    return np.asarray(d), np.asarray(g)
+
+
+class TestKLargerThanAvailable:
+    def test_fewer_real_candidates_than_k(self):
+        """3 + 2 real candidates, k=10: all five survive in order, the tail
+        carries the pad sentinel."""
+        d, g = _merge([[1.0, 3.0, PAD]], [[5, 7, -1]],
+                      [[2.0, 4.0, PAD]], [[8, 9, -1]], 10)
+        np.testing.assert_array_equal(g[0, :4], [5, 8, 7, 9])
+        np.testing.assert_array_equal(d[0, :4], [1.0, 2.0, 3.0, 4.0])
+        np.testing.assert_array_equal(g[0, 4:], -1)
+        np.testing.assert_array_equal(d[0, 4:], PAD)
+
+    def test_k_exceeds_combined_width(self):
+        """k wider than both input lists together: inputs are padded out."""
+        d, g = _merge([[1.0]], [[3]], [[2.0]], [[4]], 6)
+        assert d.shape == (1, 6) and g.shape == (1, 6)
+        np.testing.assert_array_equal(g[0], [3, 4, -1, -1, -1, -1])
+        np.testing.assert_array_equal(d[0, 2:], PAD)
+
+
+class TestDuplicateGlobalIds:
+    def test_default_keeps_duplicates(self):
+        """Without dedupe the inputs are assumed disjoint; a violated
+        assumption surfaces as a repeated gid (documented behaviour)."""
+        d, g = _merge([[1.0, 3.0]], [[7, 5]], [[2.0, PAD]], [[7, -1]], 4)
+        assert list(g[0]).count(7) == 2
+
+    def test_dedupe_keeps_best_copy(self):
+        d, g = _merge([[1.0, 3.0]], [[7, 5]], [[2.0, PAD]], [[7, -1]], 4,
+                      dedupe=True)
+        np.testing.assert_array_equal(g[0], [7, 5, -1, -1])
+        np.testing.assert_array_equal(d[0, :2], [1.0, 3.0])
+        np.testing.assert_array_equal(d[0, 2:], PAD)
+
+    def test_dedupe_tie_breaks_toward_first_input(self):
+        """Equal distances: the earlier slot survives, exactly one copy."""
+        d, g = _merge([[2.0]], [[9]], [[2.0]], [[9]], 3, dedupe=True)
+        np.testing.assert_array_equal(g[0], [9, -1, -1])
+        assert d[0, 0] == 2.0
+
+    def test_dedupe_never_drops_distinct_gids(self):
+        rng = np.random.default_rng(0)
+        da = np.sort(rng.random((2, 5)).astype(np.float32), axis=-1)
+        db = np.sort(rng.random((2, 5)).astype(np.float32), axis=-1)
+        ga = np.arange(10, dtype=np.int32).reshape(2, 5)
+        gb = ga + 100
+        d1, g1 = _merge(da, ga, db, gb, 8)
+        d2, g2 = _merge(da, ga, db, gb, 8, dedupe=True)
+        np.testing.assert_array_equal(g1, g2)
+        np.testing.assert_array_equal(d1, d2)
+
+
+class TestSentinelPropagation:
+    def test_all_pad_inputs_stay_pad(self):
+        d, g = _merge(np.full((2, 3), PAD), np.full((2, 3), -1),
+                      np.full((2, 3), PAD), np.full((2, 3), -1), 3)
+        np.testing.assert_array_equal(g, -1)
+        np.testing.assert_array_equal(d, PAD)
+
+    def test_pads_always_lose_to_real_candidates(self):
+        """A pad from one input never displaces a real candidate from the
+        other, for any distance below the sentinel (real EDs are sqrt of a
+        float32 and therefore always below sqrt(3.4e38) = PAD)."""
+        d, g = _merge([[PAD, PAD]], [[-1, -1]],
+                      [[1e18, PAD]], [[3, -1]], 2)
+        np.testing.assert_array_equal(g[0], [3, -1])
+        assert d[0, 0] == np.float32(1e18)
+
+    def test_merge_is_ascending(self):
+        rng = np.random.default_rng(1)
+        da = np.sort(rng.random((3, 6)).astype(np.float32), axis=-1)
+        db = np.sort(rng.random((3, 6)).astype(np.float32), axis=-1)
+        ga = rng.integers(0, 100, (3, 6)).astype(np.int32)
+        gb = rng.integers(100, 200, (3, 6)).astype(np.int32)
+        d, g = _merge(da, ga, db, gb, 6)
+        assert (np.diff(d, axis=-1) >= 0).all()
+        ref = np.sort(np.concatenate([da, db], axis=-1), axis=-1)[:, :6]
+        np.testing.assert_array_equal(d, ref)

@@ -128,6 +128,66 @@ class TestEngineParity:
 
 
 # ----------------------------------------------------------------------
+# Query plan cache (LRU on the P4→ signature prefix)
+# ----------------------------------------------------------------------
+class TestPlanCache:
+    def test_repeat_queries_hit_and_stay_bit_identical(self, small_index):
+        index, queries = small_index
+        engine = ClimberEngine(index, batch_size=4, k=10)
+        d1, g1, _ = engine.run(queries)
+        assert engine.stats.plan_cache_misses == len(queries)
+        assert engine.stats.plan_cache_hits == 0
+        d2, g2, _ = engine.run(queries)          # identical workload: all hit
+        assert engine.stats.plan_cache_hits == len(queries)
+        assert engine.stats.plan_cache_misses == len(queries)
+        np.testing.assert_array_equal(g1, g2)
+        np.testing.assert_array_equal(d1, d2)
+        assert 0.0 < engine.stats.plan_cache_hit_rate < 1.0
+
+    def test_cached_plan_matches_knn_query(self, small_index):
+        """Answers served off the cache equal the uncached oracle."""
+        index, queries = small_index
+        engine = ClimberEngine(index, batch_size=2, k=10)
+        engine.run(queries[:4])
+        dist, gid, _ = engine.run(queries[:4])   # fully cached pass
+        for i in range(4):
+            d1, g1, _ = knn_query(index, queries[i:i + 1], 10)
+            np.testing.assert_array_equal(np.asarray(g1)[0], gid[i])
+            np.testing.assert_array_equal(np.asarray(d1)[0], dist[i])
+
+    def test_disabled_cache_counts_nothing(self, small_index):
+        index, queries = small_index
+        engine = ClimberEngine(index, batch_size=4, k=10, plan_cache_size=0)
+        engine.run(queries)
+        engine.run(queries)
+        assert engine.stats.plan_cache_hits == 0
+        assert engine.stats.plan_cache_misses == 0
+        assert engine.stats.plan_cache_hit_rate == 0.0
+
+    def test_lru_evicts_oldest_signature(self, small_index):
+        index, queries = small_index
+        engine = ClimberEngine(index, batch_size=1, k=10, plan_cache_size=2)
+        engine.run(queries[0:1])
+        engine.run(queries[1:2])
+        engine.run(queries[2:3])                 # evicts queries[0]
+        assert len(engine._plan_cache) == 2
+        engine.run(queries[0:1])                 # must miss again
+        assert engine.stats.plan_cache_hits == 0
+        assert engine.stats.plan_cache_misses == 4
+        engine.run(queries[2:3])                 # still resident
+        assert engine.stats.plan_cache_hits == 1
+
+    def test_cache_only_keys_live_rows(self, small_index):
+        """Zero-padded tail rows of a partial batch must not enter the
+        cache or the counters."""
+        index, queries = small_index
+        engine = ClimberEngine(index, batch_size=8, k=10)
+        engine.run(queries[:3])
+        assert engine.stats.plan_cache_misses == 3
+        assert len(engine._plan_cache) == 3
+
+
+# ----------------------------------------------------------------------
 # Planner registry
 # ----------------------------------------------------------------------
 class TestPlannerRegistry:
