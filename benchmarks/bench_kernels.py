@@ -12,6 +12,7 @@ from repro.kernels import ref
 from repro.kernels.l2 import pairwise_l2
 from repro.kernels.paa_kernel import paa as paa_k
 from repro.kernels.pivot_rank import pivot_rank
+from repro.kernels.refine_topk import refine_topk
 
 
 def run() -> None:
@@ -43,3 +44,29 @@ def run() -> None:
         np.asarray(pivot_rank(z, pv, 10, interpret=True)),
         np.asarray(ref.pivot_rank_ref(z, pv, 10))))
     emit("kern/pivot_rank/pallas_interpret", 0.0, f"exact_match={same}")
+
+    # streaming fused refine: oracle throughput + kernel parity
+    rng = np.random.default_rng(3)
+    p, cap, n, qn, mp, k = 8, 64, 128, 8, 6, 20
+    data = jnp.asarray(rng.normal(size=(p, cap, n)).astype(np.float32))
+    norms = jnp.sum(data * data, axis=-1)
+    dfs = jnp.asarray(rng.integers(0, 50, size=(p, cap)).astype(np.int32))
+    gid = jnp.asarray(np.arange(p * cap, dtype=np.int32).reshape(p, cap))
+    qs = jnp.asarray(rng.normal(size=(qn, n)).astype(np.float32))
+    sp = jnp.sort(jnp.asarray(
+        rng.integers(-1, p, size=(qn, mp)).astype(np.int32)), axis=-1)
+    lo = jnp.zeros((qn, mp), jnp.int32)
+    hi = jnp.full((qn, mp), 50, jnp.int32)
+    (_, t_rt) = timed(
+        jax.jit(lambda *a: ref.refine_topk_ref(*a, k)),
+        data, norms, dfs, gid, qs, sp, lo, hi)
+    emit("kern/refine_topk/ref_jnp", t_rt * 1e6,
+         f"cand_per_s={qn*mp*cap/t_rt/1e6:.2f}M")
+    d2k, gk = refine_topk(data, norms, dfs, gid, qs, sp, lo, hi, k,
+                          interpret=True)
+    d2r, gr = ref.refine_topk_ref(data, norms, dfs, gid, qs, sp, lo, hi, k)
+    same = bool(np.array_equal(np.asarray(gk), np.asarray(gr)))
+    err = float(jnp.max(jnp.abs(jnp.minimum(d2k, 1e9)
+                                - jnp.minimum(d2r, 1e9))))
+    emit("kern/refine_topk/pallas_interpret", 0.0,
+         f"gid_exact={same};max_abs_err={err:.2e}")

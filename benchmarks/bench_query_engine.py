@@ -3,13 +3,21 @@
 The first queries/sec number for the repo: drives the batched serving
 engine over a synthetic RandomWalk index and sweeps the three levers the
 engine exposes — admission batch size {1, 8, 64}, planner variant
-(knn / adaptive), and the Pallas distance kernel.  Each cell reports
-throughput, mean partitions touched and mean candidates scanned; recall is
-reported once per variant (it is batch-invariant — the engine is
+(knn / adaptive), and the streaming fused refine kernel.  Each cell
+reports throughput, mean partitions touched and mean candidates scanned;
+recall is reported once per variant (it is batch-invariant — the engine is
 bit-identical to per-query ``knn_query``).
 
+The kernel-vs-dense column is backed by a **materialization audit**: the
+jaxprs of both refine paths are scanned and the bench asserts the fused
+kernel path materializes no intermediate of [Q, slots, cap] elements or
+more (the dense path materializes both that distance tensor and the
+[Q, slots, cap, n] gathered rows).  On CPU the kernel cells run in Pallas
+interpret mode — the throughput number is meaningless there, but the audit
+and the parity are exactly the TPU code path.
+
 Besides the CSV rows, writes ``artifacts/BENCH_query_engine.json`` so the
-perf trajectory across PRs starts here.
+perf trajectory across PRs accumulates (see benchmarks/compare.py).
 """
 from __future__ import annotations
 
@@ -17,11 +25,14 @@ import json
 from pathlib import Path
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import default_cfg, emit, standard_setup
 from repro.baselines import recall
 from repro.core import build_index
+from repro.core.query import plan as plan_queries
+from repro.core.refine import refine
 from repro.serve import ClimberEngine, EngineStats
 
 ART = Path(__file__).resolve().parents[1] / "artifacts"
@@ -34,6 +45,83 @@ VARIANTS = ("knn", "adaptive")
 # it at a reduced query count so the suite stays minutes, not hours.
 KERNEL_QUERIES = 8
 KERNEL_BATCH_SIZES = (1, 8)
+
+
+def _iter_subjaxprs(val):
+    if hasattr(val, "jaxpr"):                       # ClosedJaxpr
+        yield val.jaxpr
+    elif hasattr(val, "eqns"):                      # Jaxpr
+        yield val
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            yield from _iter_subjaxprs(v)
+
+
+def _peak_intermediate_elems(fn, *args) -> int:
+    """Largest XLA-materialized intermediate of ``fn``, in elements.
+
+    Walks every equation output of the traced jaxpr (recursing into pjit
+    and friends) but does **not** descend into pallas_call kernel bodies:
+    their block-shaped values live in VMEM by construction, while this
+    audit is about HBM tensors the compiler must materialize.
+    """
+    peak = 0
+
+    def visit(jaxpr):
+        nonlocal peak
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                shape = getattr(v.aval, "shape", ())
+                peak = max(peak, int(np.prod(shape)) if len(shape) else 1)
+            if eqn.primitive.name == "pallas_call":
+                continue
+            for val in eqn.params.values():
+                for sub in _iter_subjaxprs(val):
+                    visit(sub)
+
+    visit(jax.make_jaxpr(fn)(*args).jaxpr)
+    return peak
+
+
+def materialization_audit(index, queries: np.ndarray, k: int) -> dict:
+    """Prove the fused path never materializes the [Q, slots, cap] tensor.
+
+    Traces both refine backends on a representative engine batch and
+    compares their peak intermediate against the dense distance-tensor
+    size.  Asserts (hard — this is the acceptance criterion, not a warn)
+    that the dense path materializes ≥ Q·slots·cap elements and the fused
+    kernel path stays strictly below it.
+    """
+    q = jnp.asarray(queries[:8])
+    p4r, _ = index.featurize(q)
+    qp = plan_queries(index, p4r)
+    store = index.store
+    qn, slots = int(q.shape[0]), int(qp.sel_part.shape[-1])
+    cap = int(store.capacity)
+    dense_tensor = qn * slots * cap
+
+    peaks = {
+        use_kernel: _peak_intermediate_elems(
+            lambda qq, sp, lo, hi: refine(store, qq, sp, lo, hi, k,
+                                          use_kernel=use_kernel),
+            q, qp.sel_part, qp.sel_lo, qp.sel_hi)
+        for use_kernel in (False, True)}
+    assert peaks[False] >= dense_tensor, \
+        f"dense path should materialize the distance tensor: " \
+        f"{peaks[False]} < {dense_tensor}"
+    assert peaks[True] < dense_tensor, \
+        f"fused path materialized a [Q, slots, cap]-sized tensor: " \
+        f"{peaks[True]} >= {dense_tensor}"
+    emit("engine/refine_materialization", 0.0,
+         f"q_slots_cap={dense_tensor};dense_peak={peaks[False]};"
+         f"fused_peak={peaks[True]}")
+    return {
+        "q": qn, "slots": slots, "cap": cap,
+        "q_slots_cap_elems": dense_tensor,
+        "dense_peak_elems": peaks[False],
+        "fused_peak_elems": peaks[True],
+        "fused_materializes_q_slots_cap": bool(peaks[True] >= dense_tensor),
+    }
 
 
 def _measure(engine: ClimberEngine, queries: np.ndarray):
@@ -76,12 +164,15 @@ def run() -> None:
                     "num_queries": int(len(q_sweep)), "k": K,
                 })
 
+    audit = materialization_audit(index, queries, K)
+
     ART.mkdir(exist_ok=True)
     out = ART / "BENCH_query_engine.json"
     out.write_text(json.dumps({
         "bench": "query_engine",
         "dataset": {"name": "randomwalk", "n": 8_000,
                     "series_len": cfg.series_len},
+        "refine_materialization": audit,
         "cells": cells,
     }, indent=2))
     print(f"# wrote {out}")

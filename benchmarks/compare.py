@@ -1,0 +1,106 @@
+"""Bench-trend comparison: previous run's BENCH_*.json vs a fresh run.
+
+CI's ``bench-smoke`` job downloads the prior ``bench-artifacts`` bundle,
+re-runs the benchmarks, and calls this module to post a per-cell delta
+table to the job summary, so the perf trajectory accumulates run over run.
+
+Cells are keyed by their identity columns (everything that is not a
+measured metric), so reordering or adding cells between runs compares only
+what matches.  Throughput noise on shared CI runners is large; the output
+is **warn-only** — deltas beyond ``--warn-pct`` are flagged with ⚠ but the
+exit code is always 0.  Use it locally the same way:
+
+    PYTHONPATH=src python -m benchmarks.compare artifacts/prev artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+# measured columns; everything else in a cell identifies it
+METRICS = (
+    "queries_per_sec", "recall", "mean_partitions_touched",
+    "mean_candidates_scanned", "routing_precision", "mean_fanout",
+)
+# metrics where bigger is better (the rest are informational)
+HIGHER_IS_BETTER = {"queries_per_sec", "recall", "routing_precision"}
+DEFAULT_FILES = ("BENCH_query_engine.json", "BENCH_fleet.json")
+
+
+def _cell_key(cell: dict) -> Tuple:
+    return tuple(sorted((k, repr(v)) for k, v in cell.items()
+                        if k not in METRICS))
+
+
+def _fmt_key(cell: dict) -> str:
+    return " ".join(f"{k}={cell[k]}" for k in sorted(cell)
+                    if k not in METRICS and k not in ("num_queries", "k"))
+
+
+def load_cells(path: Path) -> Dict[Tuple, dict]:
+    doc = json.loads(path.read_text())
+    return {_cell_key(c): c for c in doc.get("cells", [])}
+
+
+def compare_file(old: Path, new: Path, warn_pct: float) -> List[str]:
+    """Markdown lines for one benchmark file pair."""
+    lines = [f"### {new.name}", ""]
+    if not new.exists():
+        return lines + [f"_fresh run produced no {new.name} — skipped_", ""]
+    if not old.exists():
+        return lines + ["_no previous artifact — baseline recorded, "
+                        "deltas start next run_", ""]
+    old_cells, new_cells = load_cells(old), load_cells(new)
+    shared = [k for k in new_cells if k in old_cells]
+    if not shared:
+        return lines + ["_no overlapping cells with the previous run_", ""]
+    lines += ["| cell | metric | prev | now | Δ% |",
+              "|---|---|---:|---:|---:|"]
+    for key in shared:
+        oc, nc = old_cells[key], new_cells[key]
+        for m in METRICS:
+            if m not in nc or m not in oc:
+                continue
+            ov, nv = float(oc[m]), float(nc[m])
+            if ov == 0.0:                # pct undefined; don't print +inf%
+                delta = "n/a (prev 0)" if nv != ov else "+0.0%"
+                lines.append(f"| {_fmt_key(nc)} | {m} | {ov:g} | {nv:g} | "
+                             f"{delta} |")
+                continue
+            pct = (nv - ov) / abs(ov) * 100.0
+            regressed = (pct < -warn_pct if m in HIGHER_IS_BETTER
+                         else abs(pct) > warn_pct)
+            flag = " ⚠" if regressed else ""
+            lines.append(f"| {_fmt_key(nc)} | {m} | {ov:g} | {nv:g} | "
+                         f"{pct:+.1f}%{flag} |")
+    dropped = len(old_cells) - len(shared)
+    added = len(new_cells) - len(shared)
+    if dropped or added:
+        lines.append(f"\n_{added} new cell(s), {dropped} no longer "
+                     f"produced_")
+    return lines + [""]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old_dir", help="directory with the previous run's "
+                                    "BENCH_*.json (may be empty/missing)")
+    ap.add_argument("new_dir", help="directory with the fresh BENCH_*.json")
+    ap.add_argument("--files", nargs="+", default=list(DEFAULT_FILES))
+    ap.add_argument("--warn-pct", type=float, default=15.0,
+                    help="flag deltas beyond this magnitude (default 15)")
+    args = ap.parse_args()
+
+    out = ["## Bench trend (warn-only)", ""]
+    for name in args.files:
+        out += compare_file(Path(args.old_dir) / name,
+                            Path(args.new_dir) / name, args.warn_pct)
+    print("\n".join(out))
+    sys.exit(0)          # warn-only by design: never fail the job
+
+
+if __name__ == "__main__":
+    main()

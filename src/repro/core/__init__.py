@@ -18,8 +18,9 @@ from repro.core.query import (QueryPlan, candidates_scanned, compact_plan,
                               plan, plan_knn, plan_adaptive, plan_exhaustive,
                               plan_od_smallest, planner_names,
                               register_planner)
-from repro.core.refine import (PAD_DIST, dispatch_refine, refine,
-                               refine_sharded, merge_topk)
+from repro.core.refine import (PAD_DIST, default_use_kernel, dispatch_refine,
+                               refine, refine_sharded, merge_topk,
+                               resolve_use_kernel)
 
 __all__ = [
     "paa", "znormalize", "select_pivots", "compute_signatures",
@@ -34,4 +35,5 @@ __all__ = [
     "plan_od_smallest", "register_planner", "get_planner", "planner_names",
     "compact_plan", "default_slot_budget", "candidates_scanned",
     "dispatch_refine", "refine", "refine_sharded", "merge_topk", "PAD_DIST",
+    "default_use_kernel", "resolve_use_kernel",
 ]

@@ -379,7 +379,8 @@ def plan(index: ClimberIndex, p4_rank_q: jnp.ndarray, *,
 
 
 def knn_query(index: ClimberIndex, queries: jnp.ndarray, k: int = 0,
-              *, variant: str = "adaptive", use_kernel: bool = False,
+              *, variant: str = "adaptive",
+              use_kernel: Optional[bool] = None,
               mesh=None, data_axis: str = "data",
               max_slots: Optional[int] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray, QueryPlan]:
@@ -390,7 +391,9 @@ def knn_query(index: ClimberIndex, queries: jnp.ndarray, k: int = 0,
       k: answer size (defaults to cfg.k).
       variant: any registered planner name ("knn" | "adaptive" |
         "od_smallest" out of the box).
-      use_kernel: run the refine distance loop through the Pallas kernel.
+      use_kernel: refine implementation — True the streaming fused Pallas
+        kernel, False the dense jnp oracle, None (default) the backend
+        default (fused on accelerators, dense on CPU).
       mesh / data_axis: execute refine sharded over the mesh's data axis
         (the store must be laid out via ``repro.distributed.shard_store``;
         a ragged partition count is padded automatically).

@@ -7,26 +7,39 @@ compute exact ED against the raw series, and rank for the final top-K.
 
 Execution backends, unified behind :func:`dispatch_refine` (the only entry
 point the query layer and the serving engine use):
-  * ``refine``          — dense jnp path (oracle; default on CPU);
-  * ``use_kernel=True`` — the distance hot loop runs the Pallas kernel
-    (``repro.kernels.l2_topk``; validated against the jnp path);
+  * ``refine``          — dense jnp path: gathers the selected rows, masks
+    the full ``[Q, slots, cap]`` distance tensor, separate top-k.  The
+    parity **oracle** and the CPU default;
+  * ``use_kernel=True`` — the streaming fused Pallas kernel
+    (``repro.kernels.refine_topk``): one pass per candidate block that
+    applies the DFS-interval mask + segment-dedupe predicate inline and
+    maintains an online per-query k-best accumulator in VMEM, never
+    materializing the ``[Q, slots, cap]`` tensor (or the gathered rows —
+    blocks are DMA'd straight from the store via scalar-prefetched
+    partition ids).  Validated against the dense oracle; gids match
+    exactly under the shared lowest-flat-index tie-break;
+  * ``use_kernel=None`` (the default everywhere) — resolves via
+    :func:`default_use_kernel`: fused kernel on accelerator backends,
+    dense oracle on CPU (where the kernel runs in slow interpret mode);
   * ``refine_sharded``  — shard_map over the data axis: each device scans
-    only its local partition shard, produces a local top-k, and a single
-    all-gather + merge yields the global answer — the TPU analogue of the
-    paper's scatter/gather over HDFS partitions.  Composes with
-    ``use_kernel``; stores whose partition count is ragged over the mesh
-    (``P % n_dev != 0``) are padded via ``repro.distributed.pad_store``.
+    only its local partition shard, produces a local **fused** (or dense)
+    top-k, and a single all-gather + merge yields the global answer — the
+    TPU analogue of the paper's scatter/gather over HDFS partitions.
+    Composes with ``use_kernel``; stores whose partition count is ragged
+    over the mesh (``P % n_dev != 0``) are padded via
+    ``repro.distributed.pad_store``.
 
 Duplicate-coverage removal (a node and its ancestor both selected) is a
 sorted-slot segmented scan: plan entries are sorted by partition id, and a
 record is dropped when an earlier entry of the same partition already
 included it — O(Q·MP·cap) instead of the former O(Q·MP²·cap) pairwise
-einsum over entry pairs.
+einsum over entry pairs.  The fused kernel evaluates the identical
+predicate per streamed block, so both backends drop the same records.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +53,22 @@ _INF = jnp.float32(3.4e38)
 # sqrt(_INF) for slots with fewer than k candidates, so consumers that merge
 # top-k lists across calls (the fleet) seed their accumulators with this.
 PAD_DIST = float(np.sqrt(np.float32(3.4e38)))
+
+
+def default_use_kernel() -> bool:
+    """Backend default for the refine implementation.
+
+    Accelerator backends run the streaming fused kernel (the whole point of
+    it — HBM-resident stores, no [Q, slots, cap] materialization); CPU runs
+    the dense jnp oracle, where the kernel would only execute in slow
+    Pallas interpret mode.
+    """
+    return jax.default_backend() == "tpu"
+
+
+def resolve_use_kernel(use_kernel: Optional[bool]) -> bool:
+    """``None`` → the backend default; explicit flags are honored as-is."""
+    return default_use_kernel() if use_kernel is None else bool(use_kernel)
 
 
 def _sort_by_partition(sel_part, sel_lo, sel_hi):
@@ -71,8 +100,11 @@ def _dedupe_segments(sel_part, incl):
 
 def _masked_distances(store: PartitionStore, queries: jnp.ndarray,
                       sel_part: jnp.ndarray, sel_lo: jnp.ndarray,
-                      sel_hi: jnp.ndarray, *, use_kernel: bool = False):
+                      sel_hi: jnp.ndarray):
     """Squared ED of each query against records of its selected partitions.
+
+    The dense formulation (gather + full distance tensor) — the parity
+    oracle the fused kernel is validated against.
 
     Args:
       store: partition store (P partitions × cap slots).
@@ -93,11 +125,7 @@ def _masked_distances(store: PartitionStore, queries: jnp.ndarray,
     rdfs = store.rec_dfs[pid]
     rgid = store.rec_gid[pid]
 
-    if use_kernel:
-        from repro.kernels import ops as kernel_ops
-        dots = kernel_ops.batched_query_dots(queries, rows)     # [Q, MP, cap]
-    else:
-        dots = jnp.einsum("qn,qmcn->qmc", queries, rows)
+    dots = jnp.einsum("qn,qmcn->qmc", queries, rows)
     d2 = jnp.maximum(q2[:, None, None] - 2.0 * dots + rows2, 0.0)
 
     valid = rgid >= 0
@@ -113,15 +141,30 @@ def _masked_distances(store: PartitionStore, queries: jnp.ndarray,
 
 def refine(store: PartitionStore, queries: jnp.ndarray, sel_part: jnp.ndarray,
            sel_lo: jnp.ndarray, sel_hi: jnp.ndarray, k: int,
-           *, use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+           *, use_kernel: Optional[bool] = None
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Exact-ED top-k within the selected (partition, node) targets.
+
+    ``use_kernel=True`` runs the streaming fused Pallas kernel (masked
+    distance + online top-k in one pass, nothing of shape [Q, slots, cap]
+    materialized); ``False`` the dense jnp oracle; ``None`` the backend
+    default (:func:`default_use_kernel`).
 
     Returns:
       (dist, gid): ``[Q, k]`` ascending ED (not squared) and record ids
-      (−1 where fewer than k candidates existed).
+      (−1 where fewer than k candidates existed; their distance is the
+      :data:`PAD_DIST` sentinel on both paths).
     """
-    d2, gid = _masked_distances(store, queries, sel_part, sel_lo, sel_hi,
-                                use_kernel=use_kernel)
+    if resolve_use_kernel(use_kernel):
+        from repro.kernels import ops as kernel_ops
+        sp, lo, hi = _sort_by_partition(sel_part, sel_lo, sel_hi)
+        d2, gid = kernel_ops.fused_refine_topk(
+            store.data, store.norms, store.rec_dfs, store.rec_gid,
+            queries, sp, lo, hi, k)
+        # under-k slots keep the +inf/-1 accumulator init → PAD_DIST/-1,
+        # the same sentinel convention as the dense branch below
+        return jnp.sqrt(d2), jnp.where(d2 >= _INF, -1, gid)
+    d2, gid = _masked_distances(store, queries, sel_part, sel_lo, sel_hi)
     if d2.shape[-1] < k:        # tiny store: fewer slots than answers asked
         tail = [(0, 0)] * (d2.ndim - 1) + [(0, k - d2.shape[-1])]
         d2 = jnp.pad(d2, tail, constant_values=_INF)
@@ -173,17 +216,22 @@ def merge_topk(dist_a, gid_a, dist_b, gid_b, k: int, *, dedupe: bool = False):
 def refine_sharded(store: PartitionStore, queries: jnp.ndarray,
                    sel_part: jnp.ndarray, sel_lo: jnp.ndarray,
                    sel_hi: jnp.ndarray, k: int, *, mesh,
-                   data_axis: str = "data", use_kernel: bool = False):
+                   data_axis: str = "data",
+                   use_kernel: Optional[bool] = None):
     """Distributed refine: local masked scan + local top-k + all-gather merge.
 
     ``store`` must be sharded over partitions on ``data_axis`` (P → data);
     queries and the plan are replicated.  Partition ids inside ``sel_part``
     are global; each device matches them against its local pid range.  A
     ragged store (``P % n_dev != 0``) is padded with empty partitions first.
+    With ``use_kernel`` (the accelerator default) each device runs the
+    streaming fused kernel over its local shard, so the per-device top-k is
+    produced without materializing any local distance tensor either.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    use_kernel = resolve_use_kernel(use_kernel)
     n_dev = mesh.shape[data_axis]
     if store.num_partitions % n_dev:
         from repro.distributed.store import shard_store
@@ -223,12 +271,15 @@ def refine_sharded(store: PartitionStore, queries: jnp.ndarray,
 def dispatch_refine(store: PartitionStore, queries: jnp.ndarray,
                     sel_part: jnp.ndarray, sel_lo: jnp.ndarray,
                     sel_hi: jnp.ndarray, k: int, *, mesh=None,
-                    data_axis: str = "data", use_kernel: bool = False):
+                    data_axis: str = "data",
+                    use_kernel: Optional[bool] = None):
     """Single execution-dispatch layer for the whole query stack.
 
     ``mesh=None`` (or a 1-device data axis) runs the single-device path;
-    a multi-device mesh runs the shard_map path.  ``use_kernel`` routes the
-    distance hot loop through the Pallas kernel on either path.
+    a multi-device mesh runs the shard_map path.  ``use_kernel`` picks the
+    refine implementation on either path: ``True`` the streaming fused
+    Pallas kernel, ``False`` the dense jnp oracle, ``None`` (default) the
+    backend default — fused on accelerators, dense on CPU.
     """
     if mesh is not None and mesh.shape[data_axis] > 1:
         return refine_sharded(store, queries, sel_part, sel_lo, sel_hi, k,

@@ -14,7 +14,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.refine import PAD_DIST
+from repro.core.refine import PAD_DIST, resolve_use_kernel
 from repro.fleet.fleet import IndexFleet
 from repro.serve.knn_engine import BatchedServingLoop
 
@@ -31,7 +31,8 @@ class FleetEngine(BatchedServingLoop):
 
     def __init__(self, fleet: IndexFleet, *, batch_size: int = 8, k: int = 0,
                  routing: str = "signature", variant: str = "adaptive",
-                 use_kernel: bool = False, fanout: Optional[int] = None):
+                 use_kernel: Optional[bool] = None,
+                 fanout: Optional[int] = None):
         if routing not in ("signature", "exhaustive"):
             raise ValueError(f"unknown routing mode {routing!r}")
         cfg = fleet.cfg.shard_cfg
@@ -40,7 +41,7 @@ class FleetEngine(BatchedServingLoop):
         self.fleet = fleet
         self.routing = routing
         self.variant = variant
-        self.use_kernel = use_kernel
+        self.use_kernel = resolve_use_kernel(use_kernel)
         self.fanout = fanout
 
     def _execute(self, qbatch: np.ndarray, nlive: int):

@@ -237,7 +237,7 @@ class DeltaShard:
             else self._bootstrap_store()
 
     def query(self, queries: np.ndarray, k: int, *, variant: str,
-              use_kernel: bool = False):
+              use_kernel: Optional[bool] = None):
         """(dist, gid_local, touched, scanned) or None when empty."""
         if not self.occupancy:
             return None
@@ -373,7 +373,8 @@ class IndexFleet:
     # -- query ------------------------------------------------------------
     def query(self, queries: np.ndarray, k: int = 0, *,
               routing: str = "signature", variant: str = "adaptive",
-              use_kernel: bool = False, fanout: Optional[int] = None
+              use_kernel: Optional[bool] = None,
+              fanout: Optional[int] = None
               ) -> Tuple[np.ndarray, np.ndarray, FleetQueryInfo]:
         """Fan out, per-shard kNN, fuse with ``merge_topk``.
 
@@ -384,6 +385,9 @@ class IndexFleet:
           variant: per-shard planner variant; ``"exhaustive"`` makes each
             shard exact, so exhaustive routing + exhaustive variant equals
             brute-force over the fleet contents.
+          use_kernel: per-shard refine implementation (True = streaming
+            fused Pallas kernel, False = dense oracle, None = backend
+            default — fused on accelerators, dense on CPU).
 
         Returns:
           (dist ``[Q, k]``, gid ``[Q, k]`` fleet-global ids, info).
@@ -450,7 +454,7 @@ class IndexFleet:
             routed_mask=mask)
 
     def scan_exact(self, queries: np.ndarray, k: int = 0, *,
-                   use_kernel: bool = False
+                   use_kernel: Optional[bool] = None
                    ) -> Tuple[np.ndarray, np.ndarray]:
         """Lossless fallback as a *single* refine over the fused store.
 

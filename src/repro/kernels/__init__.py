@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the compute hot-spots of the CLIMBER pipeline.
+#
+#   l2.py          — tiled pairwise / per-query squared-ED matmuls
+#   paa_kernel.py  — PAA mean-pool
+#   pivot_rank.py  — fused pivot-distance + top-m prefix (P4→ signatures)
+#   refine_topk.py — streaming fused refine: masked ED + online top-k per
+#                    scalar-prefetched plan entry (never materializes the
+#                    [Q, slots, cap] distance tensor)
+#
+# ops.py holds the jit'd public wrappers (interpret mode on CPU, compiled
+# on TPU); ref.py the pure-jnp oracles every kernel is validated against
+# (tests/test_kernels.py, tests/test_refine_topk.py).

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.kernels import l2 as _l2
 from repro.kernels import paa_kernel as _paa_k
 from repro.kernels import pivot_rank as _pr
+from repro.kernels import refine_topk as _rt
 
 
 def _interpret() -> bool:
@@ -29,10 +30,29 @@ def qdots(q: jnp.ndarray, rows: jnp.ndarray, **kw) -> jnp.ndarray:
 
 
 def batched_query_dots(q: jnp.ndarray, rows: jnp.ndarray, **kw) -> jnp.ndarray:
-    """Refine-stage entry point: rows ``[Q, MP, cap, n]`` → ``[Q, MP, cap]``."""
+    """Per-entry candidate dots: rows ``[Q, MP, cap, n]`` → ``[Q, MP, cap]``.
+
+    Formerly the refine-stage distance hot loop; superseded there by the
+    streaming :func:`fused_refine_topk` (which never gathers ``rows``).
+    Kept as a validated building block for gather-style consumers and the
+    kernel parity suite/µbench.
+    """
     qn, mp, cap, n = rows.shape
     flat = rows.reshape(qn, mp * cap, n)
     return qdots(q, flat, **kw).reshape(qn, mp, cap)
+
+
+def fused_refine_topk(data, norms, rec_dfs, rec_gid, queries,
+                      sel_part, sel_lo, sel_hi, k: int, **kw):
+    """Streaming fused masked-ED + top-k (see kernels/refine_topk.py).
+
+    The plan must be sorted by partition id along the entry axis.  Returns
+    ``[Q, k]`` (squared distances, gids); never materializes the
+    ``[Q, MP, cap]`` distance tensor or the gathered candidate rows.
+    """
+    return _rt.refine_topk(data, norms, rec_dfs, rec_gid, queries,
+                           sel_part, sel_lo, sel_hi, k,
+                           interpret=_interpret(), **kw)
 
 
 def paa(x: jnp.ndarray, segments: int, **kw) -> jnp.ndarray:

@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: streaming fused refine — masked ED + top-k in one pass.
+
+The refine stage (paper §VI) ranks every record of the planner-selected
+(partition, trie-node) targets by exact ED and keeps the k best.  The dense
+path gathers ``store.data[sel_part]`` into a ``[Q, MP, cap, n]`` tensor,
+materialises the ``[Q, MP, cap]`` distance tensor, and runs a separate
+top-k — fine on CPU, a memory wall on device once Q and the slot budget
+grow (the gather alone is Q×MP×cap×n×4 bytes of HBM traffic and residency).
+
+This kernel streams instead.  Grid = (Q, MP, cap/BLOCK_C); each step DMAs
+one ``[BLOCK_C, n]`` candidate block of one query's plan entry straight out
+of the partition store in HBM — the entry's partition id is read from the
+scalar-prefetched plan (``PrefetchScalarGridSpec``), so there is no
+host-side gather at all — and then, entirely in VMEM/registers:
+
+  * computes the block's squared EDs (‖q‖² − 2·q·xᵀ + ‖x‖², MXU matmul);
+  * applies the DFS-tag interval mask of the targeting trie node and the
+    segment-dedupe predicate (a record already covered by an earlier
+    same-partition plan entry is dropped — plan entries arrive sorted by
+    partition id, exactly like the dense path's segmented scan) inline;
+  * folds the block into a running per-query k-best (distance, gid)
+    accumulator held in the revisited ``[1, k]`` output block — an online
+    top-k in the FlashAttention style of streaming reductions.
+
+Nothing of shape ``[Q, MP, cap]`` (let alone the gathered rows) ever
+exists: the working set per grid step is the BLOCK_C×n candidate tile plus
+two k+BLOCK_C merge rows, ≲ BLOCK_C·n·4 bytes ≈ 2 MB at the defaults —
+comfortably inside VMEM with double-buffering headroom.
+
+Exactness: per-candidate distances are independent dot products, so
+blocking does not change them; the merge extracts minima with a
+first-occurrence (= lowest flat index) tie-break, with accumulator entries
+ordered before the current block, which reproduces ``jax.lax.top_k`` over
+the full flat candidate axis — gids match the dense oracle exactly under
+the tie-break rule, distances to fp rounding of the dot.  Slots with fewer
+than k candidates keep the +inf/-1 initialisation, which the wrapper maps
+to the ``PAD_DIST``/gid=-1 convention — identical to the dense path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_C = 512
+_INF = 3.4e38  # python float: jnp scalars would be captured as consts
+
+
+def _refine_topk_kernel(sel_ref, q_ref, data_ref, norms_ref, dfs_ref,
+                        gid_ref, sp_ref, lo_ref, hi_ref, outd_ref, outg_ref,
+                        *, k: int, block_c: int, cap: int, mp: int):
+    """One candidate block of one (query, plan-entry) pair.
+
+    ``sel_ref`` is the scalar-prefetched ``[Q, MP]`` partition-id plan (it
+    already steered this step's DMA via the index maps); ``sp/lo/hi_ref``
+    are the same plan rows in VMEM for the inline mask + dedupe.
+    """
+    s = pl.program_id(1)
+    c = pl.program_id(2)
+
+    @pl.when((s == 0) & (c == 0))
+    def _init():
+        outd_ref[...] = jnp.full((1, k), _INF, jnp.float32)
+        outg_ref[...] = jnp.full((1, k), -1, jnp.int32)
+
+    qv = q_ref[...].astype(jnp.float32)                       # [1, n]
+    rows = data_ref[0].astype(jnp.float32)                    # [bc, n]
+    q2 = jnp.sum(qv * qv)
+    dots = jax.lax.dot_general(qv, rows, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(q2 - 2.0 * dots + norms_ref[...], 0.0)   # [1, bc]
+
+    dfs = dfs_ref[...]                                        # [1, bc]
+    gid = gid_ref[...]
+    parts, los, his = sp_ref[...], lo_ref[...], hi_ref[...]   # [1, mp]
+
+    # this entry's (partition, interval): one-hot extract at slot s (masked
+    # sum instead of a dynamic VMEM index — Mosaic-safe, mp is small)
+    iota_mp = jax.lax.broadcasted_iota(jnp.int32, (1, mp), 1)
+    onehot = iota_mp == s
+    part_s = jnp.sum(jnp.where(onehot, parts, 0))
+    lo_s = jnp.sum(jnp.where(onehot, los, 0))
+    hi_s = jnp.sum(jnp.where(onehot, his, 0))
+
+    # interval mask; the cap-tail of a ragged last block is masked by index
+    cidx = c * block_c + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1)
+    incl = (gid >= 0) & (dfs >= lo_s) & (dfs < hi_s) & (part_s >= 0) \
+        & (cidx < cap)
+
+    # segment dedupe: drop records an earlier same-partition entry covered
+    earlier = (iota_mp < s) & (parts == part_s)               # [1, mp]
+    dcol = dfs[0][:, None]                                    # [bc, 1]
+    covered = jnp.any(earlier & (dcol >= los) & (dcol < his),
+                      axis=1)[None, :]                        # [1, bc]
+    incl = incl & ~covered
+
+    cand_d = jnp.where(incl, d2, _INF)
+    cand_g = jnp.where(incl, gid, -1)
+
+    # online top-k: accumulator first so flat-order tie-breaks are kept
+    all_d = jnp.concatenate([outd_ref[...], cand_d], axis=1)  # [1, k+bc]
+    all_g = jnp.concatenate([outg_ref[...], cand_g], axis=1)
+    idxs = jax.lax.broadcasted_iota(jnp.int32, all_d.shape, 1)
+    new_d, new_g = [], []
+    for _ in range(k):      # static unroll, k small (same idiom as
+        pos = jnp.argmin(all_d[0]).astype(jnp.int32)   # pivot_rank's top-m)
+        new_d.append(jnp.min(all_d))
+        new_g.append(jnp.sum(jnp.where(idxs == pos, all_g, 0)))
+        all_d = jnp.where(idxs == pos, _INF, all_d)
+    outd_ref[...] = jnp.stack(new_d)[None, :].astype(jnp.float32)
+    outg_ref[...] = jnp.stack(new_g)[None, :].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_c", "interpret"))
+def refine_topk(data: jnp.ndarray, norms: jnp.ndarray, rec_dfs: jnp.ndarray,
+                rec_gid: jnp.ndarray, queries: jnp.ndarray,
+                sel_part: jnp.ndarray, sel_lo: jnp.ndarray,
+                sel_hi: jnp.ndarray, k: int, *,
+                block_c: int = DEFAULT_BLOCK_C,
+                interpret: bool = False):
+    """Streaming fused masked-ED + top-k over the partition store.
+
+    Args:
+      data / norms / rec_dfs / rec_gid: the partition store columns,
+        ``[P, cap, n]`` / ``[P, cap]`` ×3.
+      queries: ``[Q, n]``.
+      sel_part / sel_lo / sel_hi: ``[Q, MP]`` plan, **sorted by partition
+        id along the entry axis** (pads first — the dedupe predicate needs
+        same-partition entries contiguous, as in the dense path).
+      k: answers per query.
+
+    Returns:
+      (d2, gid): ``[Q, k]`` ascending **squared** ED (+inf beyond the
+      candidate pool) and record ids (−1 there) — callers apply sqrt and
+      the sentinel convention.
+    """
+    qn, n = queries.shape
+    mp = sel_part.shape[1]
+    cap = data.shape[1]
+    if qn == 0 or mp == 0:
+        return (jnp.full((qn, k), _INF, jnp.float32),
+                jnp.full((qn, k), -1, jnp.int32))
+    bc = min(block_c, max(cap, 1))
+    nblocks = pl.cdiv(cap, bc)
+
+    store_block = lambda q, s, c, sel: (jnp.maximum(sel[q, s], 0), c)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(qn, mp, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda q, s, c, sel: (q, 0)),
+            pl.BlockSpec((1, bc, n),
+                         lambda q, s, c, sel: (jnp.maximum(sel[q, s], 0),
+                                               c, 0)),
+            pl.BlockSpec((1, bc), store_block),
+            pl.BlockSpec((1, bc), store_block),
+            pl.BlockSpec((1, bc), store_block),
+            pl.BlockSpec((1, mp), lambda q, s, c, sel: (q, 0)),
+            pl.BlockSpec((1, mp), lambda q, s, c, sel: (q, 0)),
+            pl.BlockSpec((1, mp), lambda q, s, c, sel: (q, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda q, s, c, sel: (q, 0)),
+            pl.BlockSpec((1, k), lambda q, s, c, sel: (q, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_refine_topk_kernel, k=k, block_c=bc, cap=cap,
+                          mp=mp),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((qn, k), jnp.float32),
+                   jax.ShapeDtypeStruct((qn, k), jnp.int32)],
+        interpret=interpret,
+    )(sel_part, queries, data, norms, rec_dfs, rec_gid,
+      sel_part, sel_lo, sel_hi)

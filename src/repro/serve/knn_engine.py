@@ -46,7 +46,7 @@ import numpy as np
 from repro.core.index import ClimberIndex
 from repro.core.query import candidates_scanned, default_slot_budget, \
     get_planner, plan as plan_queries
-from repro.core.refine import dispatch_refine
+from repro.core.refine import dispatch_refine, resolve_use_kernel
 
 
 @dataclasses.dataclass
@@ -230,7 +230,10 @@ class ClimberEngine(BatchedServingLoop):
       variant: registered planner name ("knn" | "adaptive" | "od_smallest" |
         "exhaustive" or anything added via ``register_planner``).
       k: default answer size (0 => ``cfg.k``).
-      use_kernel: route the refine distance loop through the Pallas kernel.
+      use_kernel: refine implementation — True the streaming fused Pallas
+        kernel (masked distance + top-k in one pass), False the dense jnp
+        oracle, None (default) the backend default: fused on accelerator
+        backends, dense on CPU.
       max_slots: static slot budget for plan compaction (None => the
         lossless ``default_slot_budget`` unless ``cfg.query_max_slots``
         overrides it; stays None — i.e. no compaction — for
@@ -246,7 +249,7 @@ class ClimberEngine(BatchedServingLoop):
 
     def __init__(self, index: ClimberIndex, *, batch_size: int = 8,
                  variant: str = "adaptive", k: int = 0,
-                 use_kernel: bool = False, mesh=None,
+                 use_kernel: Optional[bool] = None, mesh=None,
                  data_axis: str = "data",
                  max_slots: Optional[int] = None,
                  plan_cache_size: int = 256):
@@ -255,7 +258,7 @@ class ClimberEngine(BatchedServingLoop):
                          batch_size=batch_size, k=k or index.cfg.k)
         self.index = index
         self.variant = variant
-        self.use_kernel = use_kernel
+        self.use_kernel = resolve_use_kernel(use_kernel)
         self.mesh = mesh
         self.data_axis = data_axis
         if max_slots is None:
