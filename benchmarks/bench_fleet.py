@@ -1,4 +1,4 @@
-"""IndexFleet serving sweep — shards × routing mode × delta fill.
+"""IndexFleet serving sweep — shards × routing × placement × delta fill.
 
 Drives the sharded multi-index fleet over a synthetic RandomWalk corpus:
 splits the corpus into S tenant shards, optionally streams a delta's worth
@@ -6,6 +6,15 @@ of fresh records in, and measures queries/sec, recall against brute force
 over the *current* fleet contents, mean partitions touched, and the
 router's audited precision/fan-out savings.  The exhaustive rows are the
 lossless baseline; the signature rows show what the router trades.
+
+The **placement** column compares the two sealed-shard execution paths:
+``host`` (the sequential per-shard oracle loop) vs ``mesh`` (the
+device-resident stacked stores queried through one shard_map — see
+``repro.fleet.placement``).  On a single CPU device the mesh rows mostly
+measure dispatch overhead vs the S-dispatch loop; on a real multi-device
+host they measure the fan-out overlap.  Either way the bench-trend CI step
+tracks the host/mesh ratio run over run, and recall must be identical
+between placements (the mesh path is bit-identical by construction).
 
 Besides the CSV rows, writes ``artifacts/BENCH_fleet.json`` alongside the
 engine trajectory.
@@ -22,6 +31,7 @@ from benchmarks.common import default_cfg, emit, timed
 from repro.baselines import exact_knn, recall
 from repro.data import make_dataset
 from repro.fleet import FleetConfig, IndexFleet
+from repro.launch.mesh import make_mesh
 
 ART = Path(__file__).resolve().parents[1] / "artifacts"
 
@@ -31,6 +41,7 @@ N = 6_000
 SERIES_LEN = 128
 SHARD_COUNTS = (1, 4)
 ROUTING_MODES = ("signature", "exhaustive")
+PLACEMENTS = ("host", "mesh")
 DELTA_FILLS = (0.0, 0.5)          # fraction of delta_capacity streamed in
 DELTA_CAPACITY = 1_024
 
@@ -60,32 +71,36 @@ def run() -> None:
                 fleet.insert(fresh[:n_fill])
             contents = np.concatenate([base[:per * shards], fresh[:n_fill]])
             _, exact_ids = exact_knn(queries, contents, K)
+            fleet.attach_mesh(make_mesh((jax.device_count(),), ("data",)))
 
             for routing in ROUTING_MODES:
-                (dist, gid, info), secs = timed(
-                    lambda r=routing: fleet.query(queries, K, routing=r))
-                qps = NUM_QUERIES / secs
-                r = recall(gid, np.asarray(exact_ids))
-                parts = float(info.partitions_touched.mean())
-                fanout = float(info.routed_mask.sum(axis=1).mean()) \
-                    if info.routed_mask.size else 0.0
-                precision = fleet.audit_routing(queries, K) \
-                    if routing == "signature" else 1.0
-                tag = (f"fleet/s{shards}/fill{fill:.1f}/{routing}")
-                emit(tag, 1e6 / qps if qps else 0.0,
-                     f"qps={qps:.1f};recall={r:.3f};parts={parts:.1f};"
-                     f"precision={precision:.3f}")
-                cells.append({
-                    "shards": shards, "delta_fill": fill,
-                    "routing": routing,
-                    "queries_per_sec": round(qps, 2),
-                    "recall": round(float(r), 4),
-                    "mean_partitions_touched": round(parts, 2),
-                    "mean_fanout": round(fanout, 2),
-                    "routing_precision": round(float(precision), 4),
-                    "delta_occupancy": fleet.delta.occupancy,
-                    "num_queries": NUM_QUERIES, "k": K,
-                })
+                for placement in PLACEMENTS:
+                    (dist, gid, info), secs = timed(
+                        lambda r=routing, p=placement: fleet.query(
+                            queries, K, routing=r, placement=p))
+                    qps = NUM_QUERIES / secs
+                    r = recall(gid, np.asarray(exact_ids))
+                    parts = float(info.partitions_touched.mean())
+                    fanout = float(info.routed_mask.sum(axis=1).mean()) \
+                        if info.routed_mask.size else 0.0
+                    precision = fleet.audit_routing(queries, K) \
+                        if routing == "signature" else 1.0
+                    tag = (f"fleet/s{shards}/fill{fill:.1f}/{routing}"
+                           f"/{placement}")
+                    emit(tag, 1e6 / qps if qps else 0.0,
+                         f"qps={qps:.1f};recall={r:.3f};parts={parts:.1f};"
+                         f"precision={precision:.3f}")
+                    cells.append({
+                        "shards": shards, "delta_fill": fill,
+                        "routing": routing, "placement": placement,
+                        "queries_per_sec": round(qps, 2),
+                        "recall": round(float(r), 4),
+                        "mean_partitions_touched": round(parts, 2),
+                        "mean_fanout": round(fanout, 2),
+                        "routing_precision": round(float(precision), 4),
+                        "delta_occupancy": fleet.delta.occupancy,
+                        "num_queries": NUM_QUERIES, "k": K,
+                    })
 
     ART.mkdir(exist_ok=True)
     out = ART / "BENCH_fleet.json"
@@ -93,6 +108,7 @@ def run() -> None:
         "bench": "fleet",
         "dataset": {"name": "randomwalk", "n": N, "series_len": SERIES_LEN},
         "delta_capacity": DELTA_CAPACITY,
+        "mesh_devices": jax.device_count(),
         "cells": cells,
     }, indent=2))
     print(f"# wrote {out}")

@@ -6,9 +6,18 @@ table to the job summary, so the perf trajectory accumulates run over run.
 
 Cells are keyed by their identity columns (everything that is not a
 measured metric), so reordering or adding cells between runs compares only
-what matches.  Throughput noise on shared CI runners is large; the output
-is **warn-only** — deltas beyond ``--warn-pct`` are flagged with ⚠ but the
-exit code is always 0.  Use it locally the same way:
+what matches.  Nothing is skipped silently: suites present in the fresh
+run but absent from the previous artifact set get an explicit "new suite,
+no baseline" row (and new cells inside a shared suite get "new cell, no
+baseline" rows) instead of disappearing from the table.  Unless ``--files``
+is given, the suite list is auto-discovered from the fresh run's
+``BENCH_*.json`` files (union with the historical defaults), so a newly
+registered benchmark shows up in the trend the run it first writes an
+artifact.
+
+Throughput noise on shared CI runners is large; the output is **warn-only**
+— deltas beyond ``--warn-pct`` are flagged with ⚠ but the exit code is
+always 0.  Use it locally the same way:
 
     PYTHONPATH=src python -m benchmarks.compare artifacts/prev artifacts
 """
@@ -18,7 +27,7 @@ import argparse
 import json
 import sys
 from pathlib import Path
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 # measured columns; everything else in a cell identifies it
 METRICS = (
@@ -51,11 +60,15 @@ def compare_file(old: Path, new: Path, warn_pct: float) -> List[str]:
     if not new.exists():
         return lines + [f"_fresh run produced no {new.name} — skipped_", ""]
     if not old.exists():
-        return lines + ["_no previous artifact — baseline recorded, "
+        # a suite absent from the previous artifact set must not vanish
+        # from the table — record it explicitly as the new baseline
+        n = len(load_cells(new))
+        return lines + [f"_new suite, no baseline — {n} cell(s) recorded, "
                         "deltas start next run_", ""]
     old_cells, new_cells = load_cells(old), load_cells(new)
     shared = [k for k in new_cells if k in old_cells]
-    if not shared:
+    added = [k for k in new_cells if k not in old_cells]
+    if not shared and not added:
         return lines + ["_no overlapping cells with the previous run_", ""]
     lines += ["| cell | metric | prev | now | Δ% |",
               "|---|---|---:|---:|---:|"]
@@ -76,12 +89,24 @@ def compare_file(old: Path, new: Path, warn_pct: float) -> List[str]:
             flag = " ⚠" if regressed else ""
             lines.append(f"| {_fmt_key(nc)} | {m} | {ov:g} | {nv:g} | "
                          f"{pct:+.1f}%{flag} |")
+    for key in added:                    # e.g. a new sweep column value
+        lines.append(f"| {_fmt_key(new_cells[key])} | — | — | — | "
+                     f"new cell, no baseline |")
     dropped = len(old_cells) - len(shared)
-    added = len(new_cells) - len(shared)
-    if dropped or added:
-        lines.append(f"\n_{added} new cell(s), {dropped} no longer "
-                     f"produced_")
+    if dropped:
+        lines.append(f"\n_{dropped} cell(s) no longer produced_")
     return lines + [""]
+
+
+def discover_files(new_dir: Path, old_dir: Optional[Path] = None
+                   ) -> List[str]:
+    """Suites to compare: every BENCH_*.json either run produced, plus the
+    historical defaults — so a suite that stopped producing (even a
+    non-default one) still reports its skip line instead of vanishing."""
+    found = {p.name for p in new_dir.glob("BENCH_*.json")}
+    if old_dir is not None:
+        found |= {p.name for p in old_dir.glob("BENCH_*.json")}
+    return sorted(found | set(DEFAULT_FILES))
 
 
 def main() -> None:
@@ -89,13 +114,17 @@ def main() -> None:
     ap.add_argument("old_dir", help="directory with the previous run's "
                                     "BENCH_*.json (may be empty/missing)")
     ap.add_argument("new_dir", help="directory with the fresh BENCH_*.json")
-    ap.add_argument("--files", nargs="+", default=list(DEFAULT_FILES))
+    ap.add_argument("--files", nargs="+", default=None,
+                    help="explicit artifact names (default: auto-discover "
+                         "BENCH_*.json in new_dir + the defaults)")
     ap.add_argument("--warn-pct", type=float, default=15.0,
                     help="flag deltas beyond this magnitude (default 15)")
     args = ap.parse_args()
 
+    files = args.files if args.files is not None \
+        else discover_files(Path(args.new_dir), Path(args.old_dir))
     out = ["## Bench trend (warn-only)", ""]
-    for name in args.files:
+    for name in files:
         out += compare_file(Path(args.old_dir) / name,
                             Path(args.new_dir) / name, args.warn_pct)
     print("\n".join(out))

@@ -400,7 +400,12 @@ def knn_query(index: ClimberIndex, queries: jnp.ndarray, k: int = 0,
       max_slots: static slot budget for plan compaction (see :func:`plan`).
 
     Returns:
-      (dist, gid, plan): ``[Q, k]`` ED + original record ids (−1 pad).
+      (dist, gid, plan): ``dist [Q, k]`` ascending ED; ``gid [Q, k]``
+      original record row ids, ``-1`` where fewer than k candidates
+      existed (those slots carry the :data:`repro.core.refine.PAD_DIST`
+      sentinel in ``dist``, so per-call outputs fuse safely through
+      :func:`repro.core.refine.merge_topk`); and the executed QueryPlan
+      (for ``partitions_touched`` / ``candidates_scanned`` metrics).
     """
     k = k or index.cfg.k
     p4r_q, _ = index.featurize(queries)

@@ -179,9 +179,22 @@ def refine(store: PartitionStore, queries: jnp.ndarray, sel_part: jnp.ndarray,
 def merge_topk(dist_a, gid_a, dist_b, gid_b, k: int, *, dedupe: bool = False):
     """Merge two per-query top-k lists into one ``[..., k]`` top-k.
 
+    Args:
+      dist_a / dist_b: ``[..., ka]`` / ``[..., kb]`` ascending distances
+        (any matching leading batch shape; ka and kb may differ).
+      gid_a / gid_b: matching record-id arrays (``-1`` = pad entry).
+      k: output answer size.
+
+    Returns:
+      (dist ``[..., k]`` ascending, gid ``[..., k]``).  Ties break toward
+      input a, then slot order (``jax.lax.top_k`` lowest-index rule) — the
+      property the fleet's in-shard-order merge fold relies on for
+      bit-identical host/mesh placements.
+
     Pad entries (``gid = -1``) must carry the :data:`PAD_DIST` sentinel so
     they lose to every real candidate; the sentinel propagates into the
-    output wherever fewer than k real candidates exist across both inputs.
+    output wherever fewer than k real candidates exist across both inputs
+    (merging a pure-pad list into anything is therefore the identity).
 
     ``dedupe=False`` (default) assumes the inputs hold disjoint record sets
     — the sharded all-gather reduction and the fleet's sealed shards satisfy
@@ -189,6 +202,20 @@ def merge_topk(dist_a, gid_a, dist_b, gid_b, k: int, *, dedupe: bool = False):
     ``dedupe=True`` keeps only the best-ranked copy of each gid (ties break
     toward input a, then slot order); it costs O(k²) pairwise compares, so
     reserve it for merges that can legitimately see the same record twice.
+
+    Example — fusing two shards' answers (the second has only one real
+    candidate; its pad slot carries the sentinel and loses every merge)::
+
+        >>> import jax.numpy as jnp
+        >>> d_a = jnp.asarray([[1.0, 3.0]])
+        >>> g_a = jnp.asarray([[10, 11]])
+        >>> d_b = jnp.asarray([[2.0, PAD_DIST]])
+        >>> g_b = jnp.asarray([[20, -1]])
+        >>> dist, gid = merge_topk(d_a, g_a, d_b, g_b, k=3)
+        >>> gid.tolist()
+        [[10, 20, 11]]
+        >>> [round(float(x), 1) for x in dist[0]]
+        [1.0, 2.0, 3.0]
     """
     dist = jnp.concatenate([dist_a, dist_b], axis=-1)
     gid = jnp.concatenate([gid_a, gid_b], axis=-1)
@@ -275,11 +302,29 @@ def dispatch_refine(store: PartitionStore, queries: jnp.ndarray,
                     use_kernel: Optional[bool] = None):
     """Single execution-dispatch layer for the whole query stack.
 
-    ``mesh=None`` (or a 1-device data axis) runs the single-device path;
-    a multi-device mesh runs the shard_map path.  ``use_kernel`` picks the
-    refine implementation on either path: ``True`` the streaming fused
-    Pallas kernel, ``False`` the dense jnp oracle, ``None`` (default) the
-    backend default — fused on accelerators, dense on CPU.
+    Every consumer (``knn_query``, the serving engines, the fleet's exact
+    scan) funnels through here, so backend selection lives in exactly one
+    place.
+
+    Args:
+      store: PartitionStore — replicated, or sharded over ``data_axis``
+        when ``mesh`` is given (``repro.distributed.shard_store``).
+      queries: ``[Q, n]`` raw series.
+      sel_part / sel_lo / sel_hi: ``[Q, MP]`` plan — global partition ids
+        (``-1`` = unused slot) and the targeting node's DFS interval.
+      k: answer size.
+      mesh / data_axis: ``mesh=None`` (or a 1-device data axis) runs the
+        single-device path; a multi-device mesh runs the ``refine_sharded``
+        shard_map path (local top-k per device + all-gather merge).
+      use_kernel: refine implementation on either path — ``True`` the
+        streaming fused Pallas kernel, ``False`` the dense jnp oracle,
+        ``None`` (default) the backend default via
+        :func:`default_use_kernel`: fused on accelerators, dense on CPU.
+
+    Returns:
+      (dist, gid): ``[Q, k]`` ascending ED and record ids; rows with fewer
+      than k candidates carry :data:`PAD_DIST` and ``gid = -1`` on every
+      backend, so outputs merge safely via :func:`merge_topk`.
     """
     if mesh is not None and mesh.shape[data_axis] > 1:
         return refine_sharded(store, queries, sel_part, sel_lo, sel_hi, k,

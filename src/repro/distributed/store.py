@@ -7,14 +7,27 @@ its leading partition axis so each device scans only its local shard.  These
 helpers make that layout a one-liner:
 
   * :func:`store_pspecs`  — the PartitionSpec tree (every field: ``P(data)``);
-  * :func:`pad_store`     — pad P up to a multiple of the axis size (ragged
-    partition counts would otherwise be silently truncated by the per-device
-    split); padding slots carry ``rec_gid = -1`` so they can never match;
+  * :func:`pad_store`     — pad the leading axis up to a multiple of the
+    axis size (a ragged count would otherwise be silently truncated by the
+    per-device split); padding slots carry ``rec_gid = -1`` so they can
+    never match;
   * :func:`shard_store`   — pad + ``device_put`` with NamedShardings.
 
 Global partition ids are preserved: padding appends empty partitions at the
 end, and planners only ever emit real partition ids, so a padded store is
 query-for-query equivalent to the unpadded one.
+
+The same helpers serve two layouts:
+
+  * **partition-sharded** (single index): each field's leading axis is P,
+    so every device scans a slice of one index's partitions
+    (``refine_sharded``);
+  * **shard-stacked** (fleet): :func:`stack_stores` stacks whole shard
+    stores on a NEW leading shard axis ``S`` (ragged P/cap padded with
+    inert slots, local gids remapped to fleet-global), after which
+    ``pad_store``/``store_pspecs``/``shard_store`` apply verbatim to the
+    shard axis — each device then owns whole indexes, which is how the
+    fleet's mesh placement (``repro.fleet.placement``) lays a fleet out.
 """
 from __future__ import annotations
 
@@ -53,6 +66,51 @@ def pad_store(store: PartitionStore, multiple: int) -> PartitionStore:
         count=jnp.pad(store.count, tail(store.count)))
 
 
+def _pad_caps(store: PartitionStore, cap: int,
+              gid_map=None) -> PartitionStore:
+    """Pad slot capacity to ``cap`` with inert slots; optionally remap the
+    store's local record ids to global ids (``gid_map[n_local] -> gid``)."""
+    pad = cap - store.capacity
+    slot = lambda x, cv=0: jnp.pad(
+        x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2),
+        constant_values=cv)
+    gid = slot(store.rec_gid, -1)
+    if gid_map is not None:
+        gmap = jnp.asarray(np.asarray(gid_map, dtype=np.int32))
+        gid = jnp.where(gid >= 0, gmap[jnp.maximum(gid, 0)], -1)
+    return PartitionStore(
+        data=slot(store.data), norms=slot(store.norms),
+        rec_dfs=slot(store.rec_dfs, -1), rec_gid=gid, count=store.count)
+
+
+def stack_stores(stores, gid_maps=None) -> PartitionStore:
+    """Stack shard stores on a NEW leading shard axis (``S`` first).
+
+    Every field becomes ``[S, ...]`` — ``data [S, P, cap, n]``, ``count
+    [S, P]`` — with ragged partition counts and slot capacities padded to
+    the fleet-wide maxima using inert slots (``rec_gid = rec_dfs = -1``,
+    never inside a node interval, never a live record).  This is the
+    layout the fleet's mesh placement shards over the data axis: device d
+    holds whole shards ``[d·per, (d+1)·per)``, and ``pad_store`` /
+    ``store_pspecs`` apply to the shard axis unchanged.
+
+    Args:
+      stores: sequence of PartitionStore (same series_len).
+      gid_maps: optional per-store ``[n_i]`` arrays mapping each store's
+        local record ids to fleet-global ids; identity when omitted.
+    """
+    stores = list(stores)
+    if not stores:
+        raise ValueError("stack_stores needs at least one store")
+    cap = max(s.capacity for s in stores)
+    pmax = max(s.num_partitions for s in stores)
+    padded = []
+    for i, s in enumerate(stores):
+        s = _pad_caps(s, cap, None if gid_maps is None else gid_maps[i])
+        padded.append(pad_store(s, pmax) if s.num_partitions < pmax else s)
+    return PartitionStore(*[jnp.stack(x) for x in zip(*padded)])
+
+
 def concat_stores(stores, gid_maps=None) -> PartitionStore:
     """Fuse several shard stores into one union store along the P axis.
 
@@ -71,24 +129,10 @@ def concat_stores(stores, gid_maps=None) -> PartitionStore:
     if not stores:
         raise ValueError("concat_stores needs at least one store")
     cap = max(s.capacity for s in stores)
-    fields = {"data": [], "norms": [], "rec_dfs": [], "rec_gid": [],
-              "count": []}
-    for i, s in enumerate(stores):
-        pad = cap - s.capacity
-        slot = lambda x, cv=0: jnp.pad(
-            x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2),
-            constant_values=cv)
-        gid = slot(s.rec_gid, -1)
-        if gid_maps is not None:
-            gmap = jnp.asarray(np.asarray(gid_maps[i], dtype=np.int32))
-            gid = jnp.where(gid >= 0, gmap[jnp.maximum(gid, 0)], -1)
-        fields["data"].append(slot(s.data))
-        fields["norms"].append(slot(s.norms))
-        fields["rec_dfs"].append(slot(s.rec_dfs, -1))
-        fields["rec_gid"].append(gid)
-        fields["count"].append(s.count)
-    return PartitionStore(**{k: jnp.concatenate(v, axis=0)
-                             for k, v in fields.items()})
+    padded = [_pad_caps(s, cap, None if gid_maps is None else gid_maps[i])
+              for i, s in enumerate(stores)]
+    return PartitionStore(*[jnp.concatenate(x, axis=0)
+                            for x in zip(*padded)])
 
 
 def shard_store(store: PartitionStore, mesh, *,

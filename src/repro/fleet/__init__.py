@@ -1,8 +1,10 @@
 """Index fleet — sharded multi-index serving with streaming ingest."""
 from repro.fleet.fleet import (DeltaShard, FleetConfig, FleetQueryInfo,
                                FleetStats, IndexFleet, ShardHandle)
+from repro.fleet.placement import MeshFleetPlacement
 from repro.fleet.router import SignatureRouter
 from repro.fleet.engine import FleetEngine
 
 __all__ = ["IndexFleet", "FleetConfig", "FleetStats", "FleetQueryInfo",
-           "ShardHandle", "DeltaShard", "SignatureRouter", "FleetEngine"]
+           "ShardHandle", "DeltaShard", "SignatureRouter", "FleetEngine",
+           "MeshFleetPlacement"]

@@ -27,14 +27,24 @@ class FleetEngine(BatchedServingLoop):
         the fleet query path always sees the current shard set + delta).
       routing: ``"signature"`` (router fan-out) or ``"exhaustive"``.
       variant: per-shard planner variant.
+      mesh: attach a device mesh to the fleet (shorthand for
+        ``fleet.attach_mesh``) so sealed shards execute mesh-resident.
+      placement: per-tick sealed-shard execution — ``"host"`` (sequential
+        oracle loop), ``"mesh"`` (one shard_map over the stacked stores),
+        or None for the fleet default (mesh when one is attached).
     """
 
     def __init__(self, fleet: IndexFleet, *, batch_size: int = 8, k: int = 0,
                  routing: str = "signature", variant: str = "adaptive",
                  use_kernel: Optional[bool] = None,
-                 fanout: Optional[int] = None):
+                 fanout: Optional[int] = None,
+                 mesh=None, data_axis: str = "data",
+                 placement: Optional[str] = None):
         if routing not in ("signature", "exhaustive"):
             raise ValueError(f"unknown routing mode {routing!r}")
+        if mesh is not None:
+            fleet.attach_mesh(mesh, data_axis=data_axis)
+        fleet._resolve_placement(placement)   # fail fast on bad placements
         cfg = fleet.cfg.shard_cfg
         super().__init__(series_len=cfg.series_len, batch_size=batch_size,
                          k=k or cfg.k)
@@ -43,6 +53,7 @@ class FleetEngine(BatchedServingLoop):
         self.variant = variant
         self.use_kernel = resolve_use_kernel(use_kernel)
         self.fanout = fanout
+        self.placement = placement
 
     def _execute(self, qbatch: np.ndarray, nlive: int):
         """One tick: fleet-query the live rows, pad results back out.
@@ -54,7 +65,7 @@ class FleetEngine(BatchedServingLoop):
         dist, gid, info = self.fleet.query(
             qbatch[:nlive], k=self.k, routing=self.routing,
             variant=self.variant, use_kernel=self.use_kernel,
-            fanout=self.fanout)
+            fanout=self.fanout, placement=self.placement)
         dt = time.perf_counter() - t0
         bs = self.batch_size
         d = np.full((bs, self.k), PAD_DIST, np.float32)

@@ -25,6 +25,22 @@ sentinel for missing slots, which propagates through every merge.  With
 exhaustive routing and the ``"exhaustive"`` planner variant the fleet answer
 is bit-identical to a single-index ``knn_query`` over the concatenated data
 (both are exact ED top-k computed by the same refine arithmetic).
+
+Placement — where the sealed shards execute:
+
+  * ``placement="host"`` — the lossless oracle: a host loop dispatches each
+    sealed shard's ``knn_query`` sequentially and fuses on the host;
+  * ``placement="mesh"`` — the sealed stores live stacked on the device
+    mesh (:class:`repro.fleet.placement.MeshFleetPlacement`) and one
+    ``shard_map`` fans the whole batch out: per-device refine over each
+    resident shard, one ``all_gather`` + in-order ``merge_topk`` fold.
+    Bit-identical to the host loop (same plans, same refine arithmetic,
+    same merge order); the delta is always queried host-side and merged
+    last on both paths.
+
+``mesh=`` at construction (or :meth:`IndexFleet.attach_mesh`) enables the
+mesh path and makes it the default; without a mesh the default stays
+``"host"``.
 """
 from __future__ import annotations
 
@@ -40,7 +56,7 @@ from repro.core.index import (ClimberIndex, PartitionStore,
                               _route_full_dataset_jit, build_index,
                               build_store)
 from repro.core.query import (candidates_scanned, exhaustive_selection,
-                              knn_query)
+                              knn_query, plan)
 from repro.core.refine import PAD_DIST, dispatch_refine, merge_topk, refine
 from repro.distributed.store import concat_stores
 from repro.fleet.router import SignatureRouter
@@ -263,7 +279,8 @@ class IndexFleet:
 
     DELTA_KEY = "__delta__"
 
-    def __init__(self, cfg: FleetConfig):
+    def __init__(self, cfg: FleetConfig, *, mesh=None,
+                 data_axis: str = "data"):
         self.cfg = cfg
         self.shards: List[ShardHandle] = []
         self.router: Optional[SignatureRouter] = None
@@ -272,6 +289,40 @@ class IndexFleet:
         self.stats = FleetStats()
         self._next_gid = 0
         self._seal_count = 0
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self._placement = None          # lazily built MeshFleetPlacement
+
+    # -- mesh placement ---------------------------------------------------
+    def attach_mesh(self, mesh, *, data_axis: str = "data") -> None:
+        """Enable mesh-resident execution (and make it the default).
+
+        The sealed stores are stacked and laid out over ``mesh``'s
+        ``data_axis`` lazily, on the next ``placement="mesh"`` query, and
+        re-laid out whenever the sealed shard set changes.
+        """
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self._placement = None
+
+    def _resolve_placement(self, placement: Optional[str]) -> str:
+        """``None`` → ``"mesh"`` when a mesh is attached, else ``"host"``."""
+        if placement is None:
+            return "mesh" if self.mesh is not None else "host"
+        if placement not in ("host", "mesh"):
+            raise ValueError(f"unknown placement {placement!r}; "
+                             f"expected 'host' or 'mesh'")
+        if placement == "mesh" and self.mesh is None:
+            raise ValueError("placement='mesh' needs a mesh: pass mesh= at "
+                             "construction or call attach_mesh()")
+        return placement
+
+    def _ensure_placement(self):
+        from repro.fleet.placement import MeshFleetPlacement
+        if self._placement is None:
+            self._placement = MeshFleetPlacement(
+                self.mesh, self.shards, data_axis=self.data_axis)
+        return self._placement
 
     # -- membership -------------------------------------------------------
     @property
@@ -314,15 +365,22 @@ class IndexFleet:
         handle = ShardHandle(key=key, index=index, global_ids=global_ids)
         self.shards.append(handle)
         self.router.register(key, self.router.summarize(data))
+        self._placement = None          # sealed set changed: re-lay out
         return handle
 
     # -- streaming ingest -------------------------------------------------
     def insert(self, batch: np.ndarray) -> np.ndarray:
-        """Append a batch; returns the assigned global record ids.
+        """Append a ``[B, series_len]`` batch into the streaming delta.
 
-        Records are immediately visible to queries (the delta is always
-        scanned).  When the delta reaches ``delta_capacity`` and
-        ``auto_compact`` is on, it is sealed into an immutable shard.
+        Returns the assigned fleet-global record ids (``[B] int32``,
+        contiguous from the current high-water mark) — the ids later
+        queries report in their ``gid`` output.  Records are immediately
+        visible to queries on every placement (the delta is always
+        executed host-side).  When the delta reaches ``delta_capacity``
+        and ``auto_compact`` is on, it is sealed into an immutable shard
+        (see :meth:`compact`).
+
+        Raises ValueError when the batch is not ``[B, series_len]``.
         """
         batch = np.asarray(batch, dtype=np.float32)
         if batch.ndim != 2 or batch.shape[1] != self.cfg.shard_cfg.series_len:
@@ -348,8 +406,15 @@ class IndexFleet:
     def compact(self) -> Optional[ShardHandle]:
         """Seal the delta into an immutable shard (full INX rebuild).
 
-        The delta is reset only after the shard build succeeds, so a failed
-        build leaves every buffered insert queryable in place.
+        Global ids are preserved, so answers on the same contents are
+        unchanged (tested bit-for-bit).  The delta is reset only after the
+        shard build succeeds, so a failed build leaves every buffered
+        insert queryable in place.  The sealed set changes, so an attached
+        mesh placement is re-laid out on the next mesh query.
+
+        Returns the new ShardHandle, or None when the delta is empty;
+        raises ValueError when the delta holds fewer than ``num_pivots``
+        records (pivot selection needs that many samples).
         """
         if not self.delta.occupancy:
             return None
@@ -371,45 +436,13 @@ class IndexFleet:
         return handle
 
     # -- query ------------------------------------------------------------
-    def query(self, queries: np.ndarray, k: int = 0, *,
-              routing: str = "signature", variant: str = "adaptive",
-              use_kernel: Optional[bool] = None,
-              fanout: Optional[int] = None
-              ) -> Tuple[np.ndarray, np.ndarray, FleetQueryInfo]:
-        """Fan out, per-shard kNN, fuse with ``merge_topk``.
-
-        Args:
-          routing: ``"signature"`` routes each query to the ``fanout``
-            best-scoring sealed shards; ``"exhaustive"`` executes every
-            shard (lossless fan-out).  The delta is always executed.
-          variant: per-shard planner variant; ``"exhaustive"`` makes each
-            shard exact, so exhaustive routing + exhaustive variant equals
-            brute-force over the fleet contents.
-          use_kernel: per-shard refine implementation (True = streaming
-            fused Pallas kernel, False = dense oracle, None = backend
-            default — fused on accelerators, dense on CPU).
-
-        Returns:
-          (dist ``[Q, k]``, gid ``[Q, k]`` fleet-global ids, info).
-        """
-        if routing not in ("signature", "exhaustive"):
-            raise ValueError(f"unknown routing mode {routing!r}")
-        queries = np.asarray(queries, dtype=np.float32)
-        if queries.ndim != 2:
-            raise ValueError(f"queries must be [Q, n], got {queries.shape}")
-        k = k or self.cfg.shard_cfg.k
-        qn = len(queries)
-        best_d = np.full((qn, k), PAD_DIST, np.float32)
-        best_g = np.full((qn, k), -1, np.int32)
-        touched = np.zeros(qn, np.int64)
-        scanned = np.zeros(qn, np.int64)
-        s = len(self.shards)
-
-        if routing == "exhaustive" or self.router is None or s == 0:
-            mask = np.ones((qn, s), dtype=bool)
-        else:
-            mask = self.router.route(queries, fanout or self.cfg.fanout)
-
+    def _query_sealed_host(self, queries: np.ndarray, k: int,
+                           mask: np.ndarray, variant: str,
+                           use_kernel: Optional[bool],
+                           best_d: np.ndarray, best_g: np.ndarray,
+                           touched: np.ndarray, scanned: np.ndarray) -> None:
+        """The host-loop oracle: one ``knn_query`` dispatch per sealed
+        shard, fused on the host in shard order (accumulators in place)."""
         for si, shard in enumerate(self.shards):
             qsel = np.nonzero(mask[:, si])[0]
             if not len(qsel):
@@ -431,6 +464,112 @@ class IndexFleet:
             scanned[qsel] += np.asarray(
                 candidates_scanned(qp, shard.index.store), np.int64)
             self.stats.observe_shard(shard.key, len(qsel), int(pt.sum()))
+
+    def _query_sealed_mesh(self, queries: np.ndarray, k: int,
+                           mask: np.ndarray, variant: str,
+                           use_kernel: Optional[bool],
+                           best_d: np.ndarray, best_g: np.ndarray,
+                           touched: np.ndarray, scanned: np.ndarray) -> None:
+        """Mesh fan-out: plan per shard on the host (each shard has its own
+        pivots/trie — cheap), stack the plans to ``[S_pad, Q, MP]`` with
+        routing expressed as masked-out rows, and run one shard_map that
+        refines every resident shard per device and folds the answers in
+        shard order.  Bit-identical to :meth:`_query_sealed_host`."""
+        pl = self._ensure_placement()
+        qn = len(queries)
+        qj = jnp.asarray(queries)
+        plans = []
+        for si, shard in enumerate(self.shards):
+            if not mask[:, si].any():   # host loop skips unrouted shards:
+                plans.append(None)      # don't plan what won't execute
+                continue
+            p4r, _ = shard.index.featurize(qj)
+            plans.append(plan(shard.index, p4r, variant=variant))
+        if all(qp is None for qp in plans):
+            return                      # nothing routed: accumulators stay PAD
+        mp = max(int(qp.sel_part.shape[-1]) for qp in plans
+                 if qp is not None)
+        sp = np.full((pl.num_slots, qn, mp), -1, np.int32)
+        lo = np.zeros((pl.num_slots, qn, mp), np.int32)
+        hi = np.zeros((pl.num_slots, qn, mp), np.int32)
+        for si, (shard, qp) in enumerate(zip(self.shards, plans)):
+            if qp is None:
+                continue
+            w = int(qp.sel_part.shape[-1])
+            routed = mask[:, si]
+            sp[si, :, :w] = np.where(routed[:, None],
+                                     np.asarray(qp.sel_part), -1)
+            lo[si, :, :w] = np.asarray(qp.sel_lo)
+            hi[si, :, :w] = np.asarray(qp.sel_hi)
+            pt = np.asarray(qp.partitions_touched(), np.int64)
+            touched += np.where(routed, pt, 0)
+            scanned += np.where(
+                routed,
+                np.asarray(candidates_scanned(qp, shard.index.store),
+                           np.int64), 0)
+            self.stats.observe_shard(shard.key, int(routed.sum()),
+                                     int(pt[routed].sum()))
+        dist, gid = pl.dispatch(queries, sp, lo, hi, k,
+                                use_kernel=use_kernel)
+        best_d[:], best_g[:] = dist, gid
+
+    def query(self, queries: np.ndarray, k: int = 0, *,
+              routing: str = "signature", variant: str = "adaptive",
+              use_kernel: Optional[bool] = None,
+              fanout: Optional[int] = None,
+              placement: Optional[str] = None
+              ) -> Tuple[np.ndarray, np.ndarray, FleetQueryInfo]:
+        """Fan out, per-shard kNN, fuse with ``merge_topk``.
+
+        Args:
+          queries: ``[Q, n]`` raw query series.
+          k: answer size (0 ⇒ ``shard_cfg.k``).
+          routing: ``"signature"`` routes each query to the ``fanout``
+            best-scoring sealed shards; ``"exhaustive"`` executes every
+            shard (lossless fan-out).  The delta is always executed.
+          variant: per-shard planner variant; ``"exhaustive"`` makes each
+            shard exact, so exhaustive routing + exhaustive variant equals
+            brute-force over the fleet contents.
+          use_kernel: per-shard refine implementation (True = streaming
+            fused Pallas kernel, False = dense oracle, None = backend
+            default — fused on accelerators, dense on CPU).
+          placement: where the sealed shards execute — ``"host"`` (the
+            sequential per-shard oracle loop), ``"mesh"`` (one shard_map
+            over the device-resident stacked stores; needs an attached
+            mesh), or None for the default: ``"mesh"`` when a mesh is
+            attached, else ``"host"``.  Both placements return bit-
+            identical results; the delta is always executed host-side.
+
+        Returns:
+          (dist ``[Q, k]`` ascending ED, gid ``[Q, k]`` fleet-global ids,
+          info).  Rows with fewer than k candidates across the routed
+          shards carry the :data:`repro.core.PAD_DIST` sentinel and
+          ``gid = -1``.
+        """
+        if routing not in ("signature", "exhaustive"):
+            raise ValueError(f"unknown routing mode {routing!r}")
+        placement = self._resolve_placement(placement)
+        queries = np.asarray(queries, dtype=np.float32)
+        if queries.ndim != 2:
+            raise ValueError(f"queries must be [Q, n], got {queries.shape}")
+        k = k or self.cfg.shard_cfg.k
+        qn = len(queries)
+        best_d = np.full((qn, k), PAD_DIST, np.float32)
+        best_g = np.full((qn, k), -1, np.int32)
+        touched = np.zeros(qn, np.int64)
+        scanned = np.zeros(qn, np.int64)
+        s = len(self.shards)
+
+        if routing == "exhaustive" or self.router is None or s == 0:
+            mask = np.ones((qn, s), dtype=bool)
+        else:
+            mask = self.router.route(queries, fanout or self.cfg.fanout)
+
+        if s:
+            run_sealed = self._query_sealed_mesh if placement == "mesh" \
+                else self._query_sealed_host
+            run_sealed(queries, k, mask, variant, use_kernel,
+                       best_d, best_g, touched, scanned)
 
         delta_res = self.delta.query(queries, k, variant=variant,
                                      use_kernel=use_kernel)
@@ -454,7 +593,7 @@ class IndexFleet:
             routed_mask=mask)
 
     def scan_exact(self, queries: np.ndarray, k: int = 0, *,
-                   use_kernel: Optional[bool] = None
+                   use_kernel: Optional[bool] = None, mesh=None
                    ) -> Tuple[np.ndarray, np.ndarray]:
         """Lossless fallback as a *single* refine over the fused store.
 
@@ -462,9 +601,18 @@ class IndexFleet:
         exhaustive ``dispatch_refine`` — the fleet answer without any
         per-shard scatter/gather, equal to exhaustive-routing +
         exhaustive-variant :meth:`query`.
+
+        ``mesh`` (default: the fleet's attached mesh, if any) executes the
+        union scan sharded over the mesh's data axis via
+        ``refine_sharded`` — here the *partition* axis of the union store
+        is what shards over the devices, not the shard axis.
+
+        Returns ``(dist [Q, k], gid [Q, k])`` with the usual
+        :data:`repro.core.PAD_DIST` / ``gid = -1`` pad sentinel.
         """
         queries = np.asarray(queries, dtype=np.float32)
         k = k or self.cfg.shard_cfg.k
+        mesh = mesh if mesh is not None else self.mesh
         stores = [s.index.store for s in self.shards]
         gid_maps = [s.global_ids for s in self.shards]
         dstore = self.delta.store()
@@ -478,7 +626,8 @@ class IndexFleet:
         sel, lo, hi = exhaustive_selection(union.num_partitions,
                                            len(queries))
         dist, gid = dispatch_refine(union, jnp.asarray(queries), sel, lo, hi,
-                                    k, use_kernel=use_kernel)
+                                    k, mesh=mesh, data_axis=self.data_axis,
+                                    use_kernel=use_kernel)
         return np.asarray(dist), np.asarray(gid)
 
     def audit_routing(self, queries: np.ndarray, k: int = 0, *,

@@ -1,0 +1,163 @@
+"""Mesh-resident fleet placement — one shard_map instead of S dispatches.
+
+The host-loop fleet query (``IndexFleet.query(placement="host")``) executes
+the sealed shards sequentially: S separate ``knn_query`` dispatches, each a
+featurize → plan → refine round-trip, fused on the host with ``merge_topk``.
+That is the lossless oracle, but it serializes S device round-trips per
+query batch — exactly the per-node scan overlap the distributed-series
+literature (Odyssey) says a fleet must not give up.
+
+:class:`MeshFleetPlacement` keeps the sealed shards *device-resident*
+instead:
+
+  * every sealed shard's :class:`~repro.core.index.PartitionStore` is
+    stacked on a new leading shard axis (ragged partition counts / slot
+    capacities padded with inert ``rec_gid = -1`` slots, local record ids
+    remapped to fleet-global ids at stack time) via
+    :func:`repro.distributed.store.stack_stores`;
+  * the shard axis is padded to a multiple of the mesh's data-axis size
+    (``pad_store`` — an all-pad shard is a no-op under ``merge_topk``) and
+    laid out with :func:`repro.distributed.store.store_pspecs`, so device d
+    owns whole shards ``[d·per, (d+1)·per)``;
+  * one ``shard_map`` fans a query batch out: each device runs the refine
+    stage (the streaming fused ``refine_topk`` kernel on accelerators, the
+    dense jnp oracle on CPU) over each of its resident shards, then a
+    single ``all_gather`` + in-shard-order ``merge_topk`` fold produces the
+    global ``[Q, k]`` answer — one collective instead of S sequential
+    dispatches.
+
+Planning stays on the host: each shard has its own pivots/trie, so the
+per-shard plans are computed (cheaply) against each shard skeleton and
+stacked to ``[S_pad, Q, MP]``; routing is expressed *in the plan* — a query
+not routed to a shard gets that shard's plan row masked to ``-1``, which
+the refine stage turns into ``PAD_DIST``/``gid = -1`` answers that lose
+every merge.  Because the fold merges shards in the same order the host
+loop does (shard 0, 1, …, with the delta merged afterwards on the host),
+the mesh answer is bit-identical to the host loop.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.core.index import PartitionStore
+from repro.core.refine import (PAD_DIST, merge_topk, refine,
+                               resolve_use_kernel)
+from repro.distributed.store import pad_store, stack_stores, store_pspecs
+
+
+class MeshFleetPlacement:
+    """Sealed shard stores laid out over the mesh, plus the fan-out jit.
+
+    Built from the fleet's current sealed shard list; the fleet invalidates
+    and rebuilds it whenever that list changes (``add_shard`` /
+    ``compact``).  The stacked store is a device-resident *copy* of the
+    shard stores — the host copies inside each ``ClimberIndex`` stay
+    authoritative for planning and rebuilds.
+
+    Args:
+      mesh: a jax Mesh with a ``data_axis`` dimension.
+      shards: the fleet's ``ShardHandle`` list (order defines merge order).
+      data_axis: mesh axis name the shard axis is laid out over.
+    """
+
+    def __init__(self, mesh, shards, *, data_axis: str = "data"):
+        if not shards:
+            raise ValueError("mesh placement needs at least one sealed shard")
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.num_shards = len(shards)
+        n_dev = mesh.shape[data_axis]
+        stacked = stack_stores([s.index.store for s in shards],
+                               [s.global_ids for s in shards])
+        stacked = pad_store(stacked, n_dev)       # ragged S % n_dev
+        self.num_slots = int(stacked.data.shape[0])   # S_pad
+        specs = store_pspecs(data_axis)
+        self.store = PartitionStore(*[
+            jax.device_put(x, NamedSharding(mesh, s))
+            for x, s in zip(stacked, specs)])
+        # (k, use_kernel) -> jitted shard_map dispatch (jit re-traces per
+        # Q/MP shape on its own)
+        self._dispatch: Dict[Tuple, object] = {}
+
+    def _build_dispatch(self, k: int, use_kernel: bool):
+        """Compile the single-collective fan-out for one (shapes, k) combo."""
+        from jax.experimental.shard_map import shard_map
+
+        axis = self.data_axis
+        n_dev = self.mesh.shape[axis]
+        per = self.num_slots // n_dev
+        s_pad = self.num_slots
+
+        def local_fn(data, norms, rdfs, rgid, count, q, sp, lo, hi):
+            # data: [per, P, cap, n] — this device's resident shards;
+            # sp/lo/hi: [per, Q, MP] — their (routing-masked) plans.
+            local_d, local_g = [], []
+            for j in range(per):                     # static unroll
+                st = PartitionStore(data=data[j], norms=norms[j],
+                                    rec_dfs=rdfs[j], rec_gid=rgid[j],
+                                    count=count[j])
+                d, g = refine(st, q, sp[j], lo[j], hi[j], k,
+                              use_kernel=use_kernel)
+                local_d.append(d)
+                local_g.append(g)
+            d_loc = jnp.stack(local_d)               # [per, Q, k]
+            g_loc = jnp.stack(local_g)
+            # one collective: every device sees every shard's local top-k
+            d_all = jax.lax.all_gather(d_loc, axis, axis=0)  # [D, per, Q, k]
+            g_all = jax.lax.all_gather(g_loc, axis, axis=0)
+            d_all = d_all.reshape(s_pad, *d_loc.shape[1:])   # shard order
+            g_all = g_all.reshape(s_pad, *g_loc.shape[1:])
+            # fold in global shard order — the host loop's merge order, so
+            # results (incl. tie-breaks) are bit-identical to the oracle
+            best_d = jnp.full(d_loc.shape[1:], PAD_DIST, jnp.float32)
+            best_g = jnp.full(g_loc.shape[1:], -1, jnp.int32)
+            for s in range(s_pad):
+                best_d, best_g = merge_topk(best_d, best_g,
+                                            d_all[s], g_all[s], k)
+            return best_d, best_g
+
+        fn = shard_map(
+            local_fn, mesh=self.mesh,
+            in_specs=(PS(axis), PS(axis), PS(axis), PS(axis), PS(axis),
+                      PS(), PS(axis), PS(axis), PS(axis)),
+            out_specs=(PS(), PS()),
+            check_rep=False)
+        return jax.jit(fn)
+
+    def dispatch(self, queries: np.ndarray, sel_part: np.ndarray,
+                 sel_lo: np.ndarray, sel_hi: np.ndarray, k: int,
+                 use_kernel: Optional[bool] = None
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Run the fan-out: one shard_map over every sealed shard at once.
+
+        Args:
+          queries: ``[Q, n]`` raw query series (replicated to every device).
+          sel_part / sel_lo / sel_hi: ``[S_pad, Q, MP]`` stacked per-shard
+            plans; ``sel_part = -1`` marks pad slots *and* (whole rows of)
+            queries not routed to that shard.
+          k: answer size.
+          use_kernel: per-device refine implementation (None = backend
+            default — fused kernel on accelerators, dense oracle on CPU).
+
+        Returns:
+          (dist ``[Q, k]``, gid ``[Q, k]``): fused over every sealed shard,
+          fleet-global ids, ``PAD_DIST``/``-1`` where fewer than k real
+          candidates were routed.
+        """
+        use_kernel = resolve_use_kernel(use_kernel)
+        key = (k, use_kernel)
+        fn = self._dispatch.get(key)
+        if fn is None:
+            fn = self._dispatch[key] = self._build_dispatch(k, use_kernel)
+        st = self.store
+        d, g = fn(st.data, st.norms, st.rec_dfs, st.rec_gid, st.count,
+                  jnp.asarray(queries, jnp.float32),
+                  jnp.asarray(sel_part, jnp.int32),
+                  jnp.asarray(sel_lo, jnp.int32),
+                  jnp.asarray(sel_hi, jnp.int32))
+        return np.asarray(d), np.asarray(g)

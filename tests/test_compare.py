@@ -1,0 +1,109 @@
+"""benchmarks/compare.py — bench-trend diffing contract.
+
+The CI bench-trend step must never silently drop a suite: a fresh
+``BENCH_*.json`` with no counterpart in the previous artifact set gets an
+explicit "new suite, no baseline" row, new cells inside a shared suite get
+"new cell, no baseline" rows, and suites not in the historical defaults
+are auto-discovered from the fresh run's directory.
+"""
+import json
+
+import pytest
+
+from benchmarks.compare import (DEFAULT_FILES, compare_file, discover_files,
+                                load_cells)
+
+
+def write_bench(path, cells, bench="engine"):
+    path.write_text(json.dumps({"bench": bench, "cells": cells}))
+
+
+CELL_A = {"batch": 8, "variant": "adaptive", "queries_per_sec": 100.0,
+          "recall": 0.95}
+CELL_B = {"batch": 16, "variant": "adaptive", "queries_per_sec": 150.0,
+          "recall": 0.97}
+
+
+class TestCompareFile:
+    def test_new_suite_emits_explicit_baseline_row(self, tmp_path):
+        """A suite absent from the previous artifact set is reported, not
+        skipped."""
+        new = tmp_path / "BENCH_new_suite.json"
+        write_bench(new, [CELL_A, CELL_B])
+        lines = compare_file(tmp_path / "prev" / "BENCH_new_suite.json",
+                             new, warn_pct=15.0)
+        text = "\n".join(lines)
+        assert "new suite, no baseline" in text
+        assert "2 cell(s) recorded" in text
+
+    def test_missing_fresh_file_reports_skip(self, tmp_path):
+        lines = compare_file(tmp_path / "old.json", tmp_path / "gone.json",
+                             warn_pct=15.0)
+        assert any("skipped" in ln for ln in lines)
+
+    def test_shared_cells_get_deltas_and_flags(self, tmp_path):
+        old, new = tmp_path / "old.json", tmp_path / "new.json"
+        write_bench(old, [CELL_A])
+        worse = dict(CELL_A, queries_per_sec=50.0)      # -50% regression
+        write_bench(new, [worse])
+        text = "\n".join(compare_file(old, new, warn_pct=15.0))
+        assert "-50.0%" in text and "⚠" in text
+
+    def test_new_cell_in_shared_suite_reported(self, tmp_path):
+        """A cell keyed by a new identity-column value (e.g. a new
+        placement sweep column) gets its own explicit row."""
+        old, new = tmp_path / "old.json", tmp_path / "new.json"
+        write_bench(old, [CELL_A])
+        mesh_cell = dict(CELL_A, placement="mesh")      # new identity key
+        write_bench(new, [CELL_A, mesh_cell])
+        text = "\n".join(compare_file(old, new, warn_pct=15.0))
+        assert "new cell, no baseline" in text
+        assert "placement=mesh" in text
+        assert "+0.0%" in text or "| 100 | 100 |" in text  # shared compared
+
+    def test_dropped_cells_counted(self, tmp_path):
+        old, new = tmp_path / "old.json", tmp_path / "new.json"
+        write_bench(old, [CELL_A, CELL_B])
+        write_bench(new, [CELL_A])
+        text = "\n".join(compare_file(old, new, warn_pct=15.0))
+        assert "1 cell(s) no longer produced" in text
+
+
+class TestDiscovery:
+    def test_discovers_non_default_suites(self, tmp_path):
+        write_bench(tmp_path / "BENCH_custom.json", [CELL_A])
+        files = discover_files(tmp_path)
+        assert "BENCH_custom.json" in files
+        for name in DEFAULT_FILES:          # defaults always present
+            assert name in files
+
+    def test_suite_that_stopped_producing_still_listed(self, tmp_path):
+        """A non-default suite present only in the *previous* run must not
+        vanish — it gets compare_file's explicit skip line."""
+        old_dir = tmp_path / "prev"
+        old_dir.mkdir()
+        write_bench(old_dir / "BENCH_retired.json", [CELL_A])
+        files = discover_files(tmp_path, old_dir)
+        assert "BENCH_retired.json" in files
+        lines = compare_file(old_dir / "BENCH_retired.json",
+                             tmp_path / "BENCH_retired.json", warn_pct=15.0)
+        assert any("skipped" in ln for ln in lines)
+
+    def test_zero_prev_metric_has_no_inf(self, tmp_path):
+        old, new = tmp_path / "old.json", tmp_path / "new.json"
+        write_bench(old, [dict(CELL_A, queries_per_sec=0.0)])
+        write_bench(new, [CELL_A])
+        text = "\n".join(compare_file(old, new, warn_pct=15.0))
+        assert "n/a (prev 0)" in text and "inf" not in text
+
+
+class TestLoadCells:
+    def test_cells_keyed_by_identity_columns(self, tmp_path):
+        p = tmp_path / "b.json"
+        write_bench(p, [CELL_A, CELL_B])
+        cells = load_cells(p)
+        assert len(cells) == 2              # batch differs → distinct keys
+        # metric-only changes map to the same key (so runs stay comparable)
+        write_bench(p, [dict(CELL_A, queries_per_sec=1.0)])
+        (key,) = load_cells(p)
+        assert key in cells
