@@ -1,4 +1,5 @@
-"""IndexFleet serving sweep — shards × routing × placement × delta fill.
+"""IndexFleet serving sweep — shards × routing × placement × delta fill,
+plus the lifecycle columns.
 
 Drives the sharded multi-index fleet over a synthetic RandomWalk corpus:
 splits the corpus into S tenant shards, optionally streams a delta's worth
@@ -16,12 +17,23 @@ host they measure the fan-out overlap.  Either way the bench-trend CI step
 tracks the host/mesh ratio run over run, and recall must be identical
 between placements (the mesh path is bit-identical by construction).
 
+The **lifecycle** rows measure the fleet's persistence/maintenance plane
+(``repro.fleet.lifecycle``): wall time of one delta seal (``compaction_ms``
+— the INX rebuild that now runs on the compactor worker thread) and of a
+full crash restart (``restart_replay_ms`` — ``IndexFleet.open``: shard
+snapshot loads + WAL tail replay).  Run only those rows with
+``python -m benchmarks.bench_fleet --lifecycle``.
+
 Besides the CSV rows, writes ``artifacts/BENCH_fleet.json`` alongside the
-engine trajectory.
+engine trajectory; the bench-trend CI step diffs every column run over
+run.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import tempfile
+import time
 from pathlib import Path
 
 import jax
@@ -46,7 +58,52 @@ DELTA_FILLS = (0.0, 0.5)          # fraction of delta_capacity streamed in
 DELTA_CAPACITY = 1_024
 
 
-def run() -> None:
+def lifecycle_cells() -> list:
+    """Compaction latency + restart-replay time for the bench artifact."""
+    cfg = default_cfg(k=K)
+    base = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(3),
+                                   2_048, SERIES_LEN))
+    fresh = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(4),
+                                    DELTA_CAPACITY // 2, SERIES_LEN))
+    cells = []
+    with tempfile.TemporaryDirectory(prefix="bench-fleet-") as storage:
+        fleet = IndexFleet(FleetConfig(shard_cfg=cfg, fanout=1,
+                                       delta_capacity=DELTA_CAPACITY,
+                                       auto_compact=False),
+                           storage_dir=storage)
+        fleet.add_shard("t0", base)
+        for lo in range(0, len(fresh), 128):      # batched streaming ingest
+            fleet.insert(fresh[lo: lo + 128])
+        n_delta = fleet.delta.occupancy
+
+        t0 = time.perf_counter()
+        fleet.compact()
+        compaction_ms = (time.perf_counter() - t0) * 1e3
+        emit("fleet/lifecycle/compact", compaction_ms * 1e3,
+             f"records={n_delta};compaction_ms={compaction_ms:.1f}")
+        cells.append({"op": "compaction", "records": n_delta,
+                      "compaction_ms": round(compaction_ms, 2)})
+
+        # restart with a replayable WAL tail: stream another half delta in,
+        # then time a cold open (snapshot loads + replay)
+        for lo in range(0, len(fresh), 128):
+            fleet.insert(fresh[lo: lo + 128] * 1.01)
+        n_tail = fleet.delta.occupancy
+        t0 = time.perf_counter()
+        restored = IndexFleet.open(storage)
+        restart_ms = (time.perf_counter() - t0) * 1e3
+        assert restored.delta.occupancy == n_tail
+        emit("fleet/lifecycle/restart", restart_ms * 1e3,
+             f"wal_records={n_tail};restart_replay_ms={restart_ms:.1f}")
+        cells.append({"op": "restart_replay", "records": n_tail,
+                      "restart_replay_ms": round(restart_ms, 2)})
+    return cells
+
+
+def run(lifecycle_only: bool = False) -> None:
+    if lifecycle_only:
+        _write_artifact(lifecycle_cells(), mesh_devices=jax.device_count())
+        return
     cfg = default_cfg(k=K)
     base = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(0),
                                    N, SERIES_LEN))
@@ -102,17 +159,25 @@ def run() -> None:
                         "num_queries": NUM_QUERIES, "k": K,
                     })
 
+    cells.extend(lifecycle_cells())
+    _write_artifact(cells, mesh_devices=jax.device_count())
+
+
+def _write_artifact(cells: list, *, mesh_devices: int) -> None:
     ART.mkdir(exist_ok=True)
     out = ART / "BENCH_fleet.json"
     out.write_text(json.dumps({
         "bench": "fleet",
         "dataset": {"name": "randomwalk", "n": N, "series_len": SERIES_LEN},
         "delta_capacity": DELTA_CAPACITY,
-        "mesh_devices": jax.device_count(),
+        "mesh_devices": mesh_devices,
         "cells": cells,
     }, indent=2))
     print(f"# wrote {out}")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lifecycle", action="store_true",
+                    help="run (and write) only the lifecycle columns")
+    run(lifecycle_only=ap.parse_args().lifecycle)

@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Tuple
 METRICS = (
     "queries_per_sec", "recall", "mean_partitions_touched",
     "mean_candidates_scanned", "routing_precision", "mean_fanout",
+    "compaction_ms", "restart_replay_ms",       # fleet lifecycle columns
 )
 # metrics where bigger is better (the rest are informational)
 HIGHER_IS_BETTER = {"queries_per_sec", "recall", "routing_precision"}

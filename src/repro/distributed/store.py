@@ -11,7 +11,10 @@ helpers make that layout a one-liner:
     axis size (a ragged count would otherwise be silently truncated by the
     per-device split); padding slots carry ``rec_gid = -1`` so they can
     never match;
-  * :func:`shard_store`   — pad + ``device_put`` with NamedShardings.
+  * :func:`shard_store`   — pad + ``device_put`` with NamedShardings;
+  * :func:`store_to_arrays` / :func:`store_from_arrays` — the bit-exact
+    host-array wire format the fleet's shard snapshots
+    (``repro.fleet.lifecycle.snapshot``) serialize through.
 
 Global partition ids are preserved: padding appends empty partitions at the
 end, and planners only ever emit real partition ids, so a padded store is
@@ -143,3 +146,22 @@ def shard_store(store: PartitionStore, mesh, *,
     return PartitionStore(*[
         jax.device_put(x, NamedSharding(mesh, s))
         for x, s in zip(store, specs)])
+
+
+def store_to_arrays(store: PartitionStore, prefix: str = "store_"):
+    """Host-array dict of every store field (the snapshot wire format).
+
+    Keys are ``f"{prefix}{field}"`` so several stores (or a store plus
+    other arrays) can share one ``npz``.  Inverse of
+    :func:`store_from_arrays`; the round trip is bit-exact, which is what
+    makes a restored shard's answers bit-identical
+    (``repro.fleet.lifecycle.snapshot``).
+    """
+    return {prefix + name: np.asarray(getattr(store, name))
+            for name in PartitionStore._fields}
+
+
+def store_from_arrays(arrays, prefix: str = "store_") -> PartitionStore:
+    """Rebuild a device-resident store from :func:`store_to_arrays` output."""
+    return PartitionStore(*[jnp.asarray(arrays[prefix + name])
+                            for name in PartitionStore._fields])

@@ -4,7 +4,10 @@ from repro.fleet.fleet import (DeltaShard, FleetConfig, FleetQueryInfo,
 from repro.fleet.placement import MeshFleetPlacement
 from repro.fleet.router import SignatureRouter
 from repro.fleet.engine import FleetEngine
+from repro.fleet.lifecycle import (CompactionTicket, MergePolicy,
+                                   WriteAheadLog)
 
 __all__ = ["IndexFleet", "FleetConfig", "FleetStats", "FleetQueryInfo",
            "ShardHandle", "DeltaShard", "SignatureRouter", "FleetEngine",
-           "MeshFleetPlacement"]
+           "MeshFleetPlacement", "CompactionTicket", "MergePolicy",
+           "WriteAheadLog"]

@@ -6,6 +6,13 @@ The same fixed-shape batched admission as :class:`repro.serve.ClimberEngine`
 ``IndexFleet.query``: route → per-shard kNN → ``merge_topk`` fusion, so one
 engine serves every tenant's shard plus the streaming delta.  Per-query
 metrics aggregate over every shard a query touched.
+
+The engine also drives the fleet's lifecycle plane: every
+``maintenance_every`` queue ticks it runs :meth:`maintenance` between
+batches — triggering a background compaction when the delta is at capacity
+and applying the LSM merge/retirement policy
+(:class:`repro.fleet.lifecycle.merge.MergePolicy`) — so index upkeep rides
+the serving loop without ever blocking a query on an INX rebuild.
 """
 from __future__ import annotations
 
@@ -32,6 +39,10 @@ class FleetEngine(BatchedServingLoop):
       placement: per-tick sealed-shard execution — ``"host"`` (sequential
         oracle loop), ``"mesh"`` (one shard_map over the stacked stores),
         or None for the fleet default (mesh when one is attached).
+      maintenance_every: run :meth:`maintenance` after every Nth queue
+        tick (0 = only when called explicitly).
+      merge_policy: the :class:`~repro.fleet.lifecycle.merge.MergePolicy`
+        maintenance applies (None = the fleet's / the policy defaults).
     """
 
     def __init__(self, fleet: IndexFleet, *, batch_size: int = 8, k: int = 0,
@@ -39,7 +50,9 @@ class FleetEngine(BatchedServingLoop):
                  use_kernel: Optional[bool] = None,
                  fanout: Optional[int] = None,
                  mesh=None, data_axis: str = "data",
-                 placement: Optional[str] = None):
+                 placement: Optional[str] = None,
+                 maintenance_every: int = 0,
+                 merge_policy=None):
         if routing not in ("signature", "exhaustive"):
             raise ValueError(f"unknown routing mode {routing!r}")
         if mesh is not None:
@@ -54,6 +67,9 @@ class FleetEngine(BatchedServingLoop):
         self.use_kernel = resolve_use_kernel(use_kernel)
         self.fanout = fanout
         self.placement = placement
+        self.maintenance_every = maintenance_every
+        self.merge_policy = merge_policy
+        self.last_maintenance: dict = {"retired": [], "merged": []}
 
     def _execute(self, qbatch: np.ndarray, nlive: int):
         """One tick: fleet-query the live rows, pad results back out.
@@ -76,3 +92,25 @@ class FleetEngine(BatchedServingLoop):
         touched[:nlive] = info.partitions_touched
         scanned[:nlive] = info.candidates_scanned
         return d, g, touched, scanned, dt
+
+    # -- lifecycle upkeep -------------------------------------------------
+    def maintenance(self) -> dict:
+        """One lifecycle tick, between serving batches.
+
+        Kicks a *background* compaction when the delta is at capacity
+        (non-blocking: the INX rebuild runs on the compactor thread while
+        subsequent ticks keep serving the frozen delta), then applies the
+        merge/retirement policy.  Returns the maintenance report.
+        """
+        fleet = self.fleet
+        if fleet.cfg.auto_compact and \
+                fleet.delta.occupancy >= max(fleet.cfg.delta_capacity,
+                                             fleet.delta.min_build):
+            fleet.compact_async()
+        self.last_maintenance = fleet.maintenance(policy=self.merge_policy)
+        return self.last_maintenance
+
+    def _after_tick(self) -> None:
+        if self.maintenance_every and \
+                self.stats.ticks % self.maintenance_every == 0:
+            self.maintenance()

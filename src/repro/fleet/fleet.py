@@ -41,11 +41,37 @@ Placement — where the sealed shards execute:
 ``mesh=`` at construction (or :meth:`IndexFleet.attach_mesh`) enables the
 mesh path and makes it the default; without a mesh the default stays
 ``"host"``.
+
+Lifecycle plane (``repro.fleet.lifecycle``) — what makes the fleet survive
+a restart and stay healthy over time:
+
+  * **durability** — with a ``storage_dir`` attached, every ``insert``
+    batch is appended to a binary write-ahead log *before* the delta
+    scatter, and ``compact`` snapshots the sealed shard before truncating
+    the WAL segments it came from.  :meth:`IndexFleet.save` /
+    :meth:`IndexFleet.open` persist / restore the whole fleet; restart
+    replays the WAL tail batch-for-batch (skipping frames a sealed shard
+    already covers), so post-restart answers are bit-identical to the
+    never-crashed fleet;
+  * **background compaction** — ``compact()`` always runs the INX rebuild
+    on a worker thread over a frozen delta; queries keep hitting the
+    frozen delta until the sealed shard swaps in atomically.
+    ``compact_async()`` returns the ticket instead of waiting
+    (``FleetConfig.background_compaction`` makes auto-compaction
+    non-blocking too);
+  * **merge / retirement** — :meth:`IndexFleet.maintenance` applies an
+    LSM-style :class:`repro.fleet.lifecycle.merge.MergePolicy`: small
+    adjacent sealed shards are merged (rebuild over their concatenated
+    records, global ids preserved) and shards past a time horizon are
+    retired.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -74,6 +100,8 @@ class FleetConfig:
                                      # (None => shard_cfg.capacity — full
                                      # capacity slack for in-place appends)
     auto_compact: bool = True       # seal automatically at delta_capacity
+    background_compaction: bool = False  # auto-compaction returns before the
+                                         # rebuild finishes (ticket-based)
     seed: int = 0
 
 
@@ -85,6 +113,8 @@ class ShardHandle:
     index: ClimberIndex
     global_ids: np.ndarray          # [n_shard] local row -> global record id
     sealed: bool = True
+    created_at: float = 0.0         # wall-clock seal/registration time
+                                    # (drives MergePolicy.retire_after)
 
     @property
     def num_records(self) -> int:
@@ -104,6 +134,10 @@ class FleetStats:
     exhaustive_pairs: int = 0       # what exhaustive fan-out would have run
     routing_audits: int = 0
     routing_overlap: float = 0.0    # running sum of audited precision
+    compaction_ms: float = 0.0      # cumulative seal wall time (build+swap)
+    wal_bytes: int = 0              # pending WAL bytes (frames not yet sealed)
+    merges: int = 0                 # shard pairs merged by maintenance()
+    retired_shards: int = 0         # shards aged out by maintenance()
     per_shard_queries: Dict[str, int] = field(default_factory=dict)
     per_shard_partitions: Dict[str, int] = field(default_factory=dict)
 
@@ -126,6 +160,13 @@ class FleetStats:
         return 1.0 - self.routed_pairs / self.exhaustive_pairs \
             if self.exhaustive_pairs else 0.0
 
+    def lifecycle_snapshot(self) -> dict:
+        """Just the lifecycle counters (rides on ``FleetQueryInfo``)."""
+        return {"compaction_ms": self.compaction_ms,
+                "wal_bytes": self.wal_bytes,
+                "merges": self.merges,
+                "retired_shards": self.retired_shards}
+
     def snapshot(self) -> dict:
         d = dataclasses.asdict(self)
         d["routing_precision"] = self.routing_precision
@@ -140,6 +181,9 @@ class FleetQueryInfo:
     partitions_touched: np.ndarray   # [Q] summed over every shard executed
     candidates_scanned: np.ndarray   # [Q]
     routed_mask: np.ndarray          # [Q, S] sealed shards each query hit
+    lifecycle: Optional[dict] = None  # FleetStats.lifecycle_snapshot() at
+                                      # query time (compaction_ms, wal_bytes,
+                                      # merges, retired_shards)
 
 
 class DeltaShard:
@@ -274,13 +318,45 @@ class DeltaShard:
                            np.int64))
 
 
+@dataclass
+class FrozenDelta:
+    """A delta frozen for sealing: contents + the WAL segments backing it.
+
+    Built by :meth:`IndexFleet._freeze` under the fleet lock; the build
+    runs over ``data``/``global_ids`` off the lock while queries keep
+    hitting the frozen :class:`DeltaShard` (still registered as
+    ``fleet._sealing``).
+    """
+
+    delta: DeltaShard
+    frames: List[Tuple[np.ndarray, np.ndarray]]   # (gids, batch) in order
+    segs: List[int]                               # WAL segments to drop
+    fold: int                                     # build-key fold (shard
+                                                  # count at freeze + 17)
+    key: str                                      # sealed shard key
+
+    @property
+    def data(self) -> np.ndarray:
+        return self.delta.data
+
+    @property
+    def global_ids(self) -> np.ndarray:
+        return self.delta.global_ids
+
+
+def _frame_nbytes(gids: np.ndarray, batch: np.ndarray) -> int:
+    from repro.fleet.lifecycle.wal import _HEADER
+    return _HEADER.size + gids.size * 4 + batch.size * 4
+
+
 class IndexFleet:
     """Several CLIMBER shards + streaming delta behind one query surface."""
 
     DELTA_KEY = "__delta__"
 
     def __init__(self, cfg: FleetConfig, *, mesh=None,
-                 data_axis: str = "data"):
+                 data_axis: str = "data",
+                 storage_dir: Optional[str] = None):
         self.cfg = cfg
         self.shards: List[ShardHandle] = []
         self.router: Optional[SignatureRouter] = None
@@ -289,9 +365,24 @@ class IndexFleet:
         self.stats = FleetStats()
         self._next_gid = 0
         self._seal_count = 0
+        self._merge_count = 0
         self.mesh = mesh
         self.data_axis = data_axis
         self._placement = None          # lazily built MeshFleetPlacement
+        self.merge_policy = None        # default MergePolicy for maintenance
+        # -- lifecycle state (repro.fleet.lifecycle) ----------------------
+        self._lock = threading.RLock()
+        self.wal = None                 # WriteAheadLog when storage attached
+        self.storage_dir: Optional[Path] = None
+        self._shard_dirs: Dict[str, str] = {}   # shard key -> snapshot slug
+        self._frames: List[Tuple[np.ndarray, np.ndarray]] = []  # active delta
+        self._delta_segs: List[int] = []        # WAL segments backing it
+        self._sealing: Optional[DeltaShard] = None   # frozen mid-compaction
+        self._sealing_frames: List[Tuple[np.ndarray, np.ndarray]] = []
+        self._sealing_segs: List[int] = []
+        self._seal_ticket = None        # in-flight CompactionTicket
+        if storage_dir is not None:
+            self.attach_storage(storage_dir)
 
     # -- mesh placement ---------------------------------------------------
     def attach_mesh(self, mesh, *, data_axis: str = "data") -> None:
@@ -301,9 +392,10 @@ class IndexFleet:
         ``data_axis`` lazily, on the next ``placement="mesh"`` query, and
         re-laid out whenever the sealed shard set changes.
         """
-        self.mesh = mesh
-        self.data_axis = data_axis
-        self._placement = None
+        with self._lock:
+            self.mesh = mesh
+            self.data_axis = data_axis
+            self._placement = None
 
     def _resolve_placement(self, placement: Optional[str]) -> str:
         """``None`` → ``"mesh"`` when a mesh is attached, else ``"host"``."""
@@ -324,10 +416,166 @@ class IndexFleet:
                 self.mesh, self.shards, data_axis=self.data_axis)
         return self._placement
 
+    # -- durable storage --------------------------------------------------
+    def attach_storage(self, storage_dir) -> None:
+        """Make the fleet durable under ``storage_dir``.
+
+        Opens (or creates) the write-ahead log — subsequent ``insert``
+        batches are appended there before the delta scatter — and flushes
+        any batches buffered in memory before attachment.  Restoring an
+        existing fleet directory goes through :meth:`open` instead; this
+        method refuses a WAL that already holds frames (it cannot know
+        whether they are in the delta).
+        """
+        from repro.fleet.lifecycle.snapshot import save_fleet
+        from repro.fleet.lifecycle.wal import WriteAheadLog
+        with self._lock:
+            storage_dir = Path(storage_dir)
+            if self.storage_dir is not None:
+                if storage_dir != self.storage_dir:
+                    raise ValueError(
+                        f"fleet already attached to {self.storage_dir}; "
+                        f"cannot re-attach to {storage_dir}")
+                return
+            wal = WriteAheadLog(storage_dir / "wal")
+            if wal.replay():
+                wal.close()
+                raise ValueError(
+                    f"{storage_dir} already holds WAL frames; use "
+                    f"IndexFleet.open() to restore it")
+            self.storage_dir = storage_dir
+            self.wal = wal
+            # flush memory-buffered batches: the frozen delta's frames get
+            # their own (immediately rolled) segment so the segment ↔ delta
+            # correspondence holds for the in-flight seal's truncation
+            if self._sealing_frames:
+                for g, b in self._sealing_frames:
+                    self.wal.append(g, b)
+                self._sealing_segs = [self.wal.roll()]
+            for g, b in self._frames:
+                self.wal.append(g, b)
+            self._delta_segs = [self.wal.active_segment]
+            save_fleet(self, storage_dir)
+
+    def save(self, storage_dir=None) -> Path:
+        """Persist the fleet: sealed-shard snapshots + manifest (+ WAL).
+
+        ``storage_dir`` defaults to the attached storage directory; a
+        fleet without one is attached first (from then on every insert is
+        WAL-durable there).  Returns the directory.  Restore with
+        :meth:`open`.
+        """
+        from repro.fleet.lifecycle.snapshot import save_fleet
+        with self._lock:
+            if storage_dir is None:
+                if self.storage_dir is None:
+                    raise ValueError("no storage attached: pass a directory")
+                storage_dir = self.storage_dir
+            self.attach_storage(storage_dir)
+            return save_fleet(self, Path(storage_dir))
+
+    @classmethod
+    def open(cls, storage_dir, *, mesh=None,
+             data_axis: str = "data") -> "IndexFleet":
+        """Restore a fleet saved under ``storage_dir``.
+
+        Sealed shards load from their snapshots (bit-exact arrays), the
+        router restores verbatim, and the WAL tail replays batch-for-batch
+        into a fresh delta — skipping frames whose global ids a sealed
+        shard already covers (the crash window between compact swap and
+        WAL truncate).  Replay reproduces the exact insert sequence, so
+        the restored delta's rebuild history — and therefore every query
+        answer, routed or exhaustive — is bit-identical to the
+        never-crashed fleet (``tests/test_fleet_lifecycle.py``).
+        """
+        from repro.fleet.lifecycle.snapshot import (load_router, load_shard,
+                                                    read_manifest)
+        from repro.fleet.lifecycle.wal import WriteAheadLog
+        storage_dir = Path(storage_dir)
+        _recover_wal_rebase(storage_dir)
+        manifest = read_manifest(storage_dir)
+        shard_cfg = ClimberConfig(**manifest["shard_cfg"])
+        cfg = FleetConfig(shard_cfg=shard_cfg, **manifest["fleet"])
+        fleet = cls(cfg, mesh=mesh, data_axis=data_axis)
+        fleet._seal_count = int(manifest["seal_count"])
+        fleet._merge_count = int(manifest["merge_count"])
+        for entry in manifest["shards"]:
+            handle = load_shard(storage_dir / "shards" / entry["dir"])
+            fleet.shards.append(handle)
+            fleet._shard_dirs[handle.key] = entry["dir"]
+        fleet.router = load_router(storage_dir, manifest, shard_cfg)
+        fleet._next_gid = int(manifest["next_gid"])
+
+        # replay the WAL tail in memory-frame mode (storage attaches after,
+        # via an atomic rebase, so a replay-time auto-compaction can never
+        # drop segments that still hold un-replayed frames)
+        wal_dir = storage_dir / "wal"
+        frames = []
+        if wal_dir.exists():
+            wal = WriteAheadLog(wal_dir)
+            frames = wal.replay()
+            wal.close()
+        sealed = np.sort(np.concatenate(
+            [s.global_ids for s in fleet.shards])) \
+            if fleet.shards else np.zeros(0, np.int32)
+        for _seg, gids, batch in frames:
+            if len(sealed) and bool(np.isin(gids, sealed).all()):
+                continue            # sealed before the crash; already durable
+            with fleet._lock:
+                fleet._log_frame(gids, batch)
+                fleet._ingest(batch, gids)
+                fleet._next_gid = max(fleet._next_gid, int(gids.max()) + 1) \
+                    if len(gids) else fleet._next_gid
+            fleet._maybe_auto_compact()
+        fleet._attach_storage_rebased(storage_dir)
+        return fleet
+
+    def _attach_storage_rebased(self, storage_dir: Path) -> None:
+        """Adopt ``storage_dir`` after a replay: atomically rewrite the WAL
+        so it holds exactly the frames still pending in the delta.
+
+        Ordering matters: shards sealed *during* the replay (an
+        auto-compaction re-run) exist only in memory until ``save_fleet``
+        snapshots them, so the manifest is made durable **before** the old
+        WAL — whose frames are their only other copy — is rewritten.  A
+        crash before the swap then replays the old WAL against the updated
+        manifest (sealed frames skip by gid); a crash during the swap is
+        finished by :func:`_recover_wal_rebase`.
+        """
+        import shutil
+
+        from repro.fleet.lifecycle.snapshot import save_fleet
+        from repro.fleet.lifecycle.wal import WriteAheadLog
+        with self._lock:
+            self.storage_dir = storage_dir
+            save_fleet(self, storage_dir)       # replay-sealed shards first
+            wal_dir = storage_dir / "wal"
+            rebase = storage_dir / "wal.rebase"
+            if rebase.exists():
+                shutil.rmtree(rebase)
+            wal = WriteAheadLog(rebase)
+            for g, b in self._frames:
+                wal.append(g, b)
+            wal.close()
+            old = storage_dir / "wal.old"
+            if old.exists():
+                shutil.rmtree(old)
+            if wal_dir.exists():
+                wal_dir.rename(old)
+            rebase.rename(wal_dir)              # atomic publish
+            if old.exists():
+                shutil.rmtree(old)
+            self.wal = WriteAheadLog(wal_dir)
+            self._delta_segs = [self.wal.active_segment]
+            self._refresh_gauges()
+
     # -- membership -------------------------------------------------------
     @property
     def total_records(self) -> int:
-        return sum(s.num_records for s in self.shards) + self.delta.occupancy
+        with self._lock:
+            sealed = sum(s.num_records for s in self.shards)
+            frozen = self._sealing.occupancy if self._sealing else 0
+            return sealed + frozen + self.delta.occupancy
 
     def _ensure_router(self, sample: np.ndarray) -> None:
         """Build the reference pivots once enough rows exist.
@@ -343,6 +591,12 @@ class IndexFleet:
                 sample[: max(4 * self.cfg.shard_cfg.num_pivots, 256)],
                 self.cfg.shard_cfg)
 
+    def _build_shard_index(self, data: np.ndarray, fold: int) -> ClimberIndex:
+        """Deterministic INX build for a fleet member (no lock needed)."""
+        build_key = jax.random.fold_in(
+            jax.random.PRNGKey(self.cfg.seed), fold)
+        return build_index(build_key, jnp.asarray(data), self.cfg.shard_cfg)
+
     def add_shard(self, key: str, data: np.ndarray,
                   global_ids: Optional[np.ndarray] = None) -> ShardHandle:
         """Build and register an immutable shard over ``data``.
@@ -350,45 +604,51 @@ class IndexFleet:
         ``global_ids`` defaults to the next contiguous fleet-global range.
         """
         data = np.asarray(data, dtype=np.float32)
-        if any(s.key == key for s in self.shards):
-            raise ValueError(f"duplicate shard key {key!r}")
-        if global_ids is None:
-            global_ids = np.arange(self._next_gid,
-                                   self._next_gid + len(data), dtype=np.int32)
-        global_ids = np.asarray(global_ids, dtype=np.int32)
-        if len(global_ids):
-            self._next_gid = max(self._next_gid, int(global_ids.max()) + 1)
-        build_key = jax.random.fold_in(
-            jax.random.PRNGKey(self.cfg.seed), len(self.shards) + 17)
-        index = build_index(build_key, jnp.asarray(data), self.cfg.shard_cfg)
-        self._ensure_router(data)
-        handle = ShardHandle(key=key, index=index, global_ids=global_ids)
-        self.shards.append(handle)
-        self.router.register(key, self.router.summarize(data))
-        self._placement = None          # sealed set changed: re-lay out
+        with self._lock:
+            if any(s.key == key for s in self.shards):
+                raise ValueError(f"duplicate shard key {key!r}")
+            if global_ids is None:
+                global_ids = np.arange(
+                    self._next_gid, self._next_gid + len(data),
+                    dtype=np.int32)
+            global_ids = np.asarray(global_ids, dtype=np.int32)
+            if len(global_ids):
+                self._next_gid = max(self._next_gid,
+                                     int(global_ids.max()) + 1)
+            fold = len(self.shards) + 17
+        index = self._build_shard_index(data, fold)
+        handle = ShardHandle(key=key, index=index, global_ids=global_ids,
+                             created_at=time.time())
+        with self._lock:
+            self._ensure_router(data)
+            self.shards.append(handle)
+            self.router.register(key, self.router.summarize(data))
+            self._placement = None      # sealed set changed: re-lay out
+            self._persist_shard(handle)
         return handle
 
+    def _persist_shard(self, handle: ShardHandle) -> None:
+        """Snapshot one sealed shard + rewrite the manifest (lock held)."""
+        if self.storage_dir is None:
+            return
+        from repro.fleet.lifecycle.snapshot import (save_shard, shard_slug,
+                                                    write_manifest)
+        slug = shard_slug(handle.key, set(self._shard_dirs.values()))
+        save_shard(self.storage_dir / "shards" / slug, handle)
+        self._shard_dirs[handle.key] = slug
+        write_manifest(self, self.storage_dir)
+
     # -- streaming ingest -------------------------------------------------
-    def insert(self, batch: np.ndarray) -> np.ndarray:
-        """Append a ``[B, series_len]`` batch into the streaming delta.
+    def _log_frame(self, gids: np.ndarray, batch: np.ndarray) -> None:
+        """Record one insert batch: WAL append (the durability point —
+        strictly before the delta scatter) + the in-memory frame list."""
+        if self.wal is not None:
+            self.wal.append(gids, batch)
+        self._frames.append((gids, batch))
 
-        Returns the assigned fleet-global record ids (``[B] int32``,
-        contiguous from the current high-water mark) — the ids later
-        queries report in their ``gid`` output.  Records are immediately
-        visible to queries on every placement (the delta is always
-        executed host-side).  When the delta reaches ``delta_capacity``
-        and ``auto_compact`` is on, it is sealed into an immutable shard
-        (see :meth:`compact`).
-
-        Raises ValueError when the batch is not ``[B, series_len]``.
-        """
-        batch = np.asarray(batch, dtype=np.float32)
-        if batch.ndim != 2 or batch.shape[1] != self.cfg.shard_cfg.series_len:
-            raise ValueError(f"insert batch shape {batch.shape} != "
-                             f"[B, {self.cfg.shard_cfg.series_len}]")
-        gids = np.arange(self._next_gid, self._next_gid + len(batch),
-                         dtype=np.int32)
-        self._next_gid += len(batch)
+    def _ingest(self, batch: np.ndarray, gids: np.ndarray) -> None:
+        """Apply one logged batch to the delta (lock held; no WAL write —
+        shared by live inserts and WAL replay)."""
         before = self.delta.rebuilds
         self.delta.insert(batch, gids)
         # accumulated delta contents, not just this batch: small first
@@ -396,26 +656,78 @@ class IndexFleet:
         self._ensure_router(self.delta.data)
         self.stats.delta_rebuilds += self.delta.rebuilds - before
         self.stats.inserts += len(batch)
-        self.stats.delta_occupancy = self.delta.occupancy
-        if self.cfg.auto_compact and \
-                self.delta.occupancy >= max(self.cfg.delta_capacity,
-                                            self.delta.min_build):
+        self._refresh_gauges()
+
+    def _refresh_gauges(self) -> None:
+        frozen = self._sealing.occupancy if self._sealing else 0
+        self.stats.delta_occupancy = self.delta.occupancy + frozen
+        self.stats.wal_bytes = sum(
+            _frame_nbytes(g, b)
+            for g, b in self._frames + self._sealing_frames)
+
+    def _maybe_auto_compact(self) -> None:
+        """Seal when the delta crosses capacity (called off the lock so a
+        synchronous compact can join an in-flight background ticket)."""
+        if not self.cfg.auto_compact:
+            return
+        with self._lock:
+            due = self.delta.occupancy >= max(self.cfg.delta_capacity,
+                                              self.delta.min_build)
+        if not due:
+            return
+        if self.cfg.background_compaction:
+            self.compact_async()
+        else:
             self.compact()
+
+    def insert(self, batch: np.ndarray) -> np.ndarray:
+        """Append a ``[B, series_len]`` batch into the streaming delta.
+
+        Returns the assigned fleet-global record ids (``[B] int32``,
+        contiguous from the current high-water mark) — the ids later
+        queries report in their ``gid`` output.  With storage attached the
+        batch is appended to the write-ahead log *before* the delta
+        scatter, so an acknowledged insert survives a crash (replayed by
+        :meth:`open`).  Records are immediately visible to queries on
+        every placement (the delta is always executed host-side).  When
+        the delta reaches ``delta_capacity`` and ``auto_compact`` is on,
+        it is sealed into an immutable shard (see :meth:`compact`; with
+        ``background_compaction`` the seal happens off-thread and insert
+        returns immediately).
+
+        Raises ValueError when the batch is not ``[B, series_len]``.
+        """
+        batch = np.asarray(batch, dtype=np.float32)
+        if batch.ndim != 2 or batch.shape[1] != self.cfg.shard_cfg.series_len:
+            raise ValueError(f"insert batch shape {batch.shape} != "
+                             f"[B, {self.cfg.shard_cfg.series_len}]")
+        with self._lock:
+            gids = np.arange(self._next_gid, self._next_gid + len(batch),
+                             dtype=np.int32)
+            self._next_gid += len(batch)
+            self._log_frame(gids, batch)
+            self._ingest(batch, gids)
+        self._maybe_auto_compact()
         return gids
 
-    def compact(self) -> Optional[ShardHandle]:
-        """Seal the delta into an immutable shard (full INX rebuild).
+    # -- compaction (freeze → build off-lock → swap) ----------------------
+    def _next_seal_key(self) -> str:
+        self._seal_count += 1
+        while any(s.key == f"sealed:{self._seal_count}"
+                  for s in self.shards):
+            self._seal_count += 1
+        return f"sealed:{self._seal_count}"
 
-        Global ids are preserved, so answers on the same contents are
-        unchanged (tested bit-for-bit).  The delta is reset only after the
-        shard build succeeds, so a failed build leaves every buffered
-        insert queryable in place.  The sealed set changes, so an attached
-        mesh placement is re-laid out on the next mesh query.
+    def _freeze(self) -> Optional[FrozenDelta]:
+        """Freeze the delta for sealing (lock held by the caller).
 
-        Returns the new ShardHandle, or None when the delta is empty;
-        raises ValueError when the delta holds fewer than ``num_pivots``
-        records (pivot selection needs that many samples).
+        The frozen delta stays registered (queries keep hitting it); a
+        fresh delta takes over ingest, and the WAL rolls so the frozen
+        segments correspond exactly to the frozen contents.  Returns None
+        when the delta is empty; raises when it cannot build an index yet.
         """
+        if self._sealing is not None:
+            raise RuntimeError("a compaction is already in flight")
         if not self.delta.occupancy:
             return None
         if self.delta.occupancy < self.delta.min_build:
@@ -423,27 +735,140 @@ class IndexFleet:
                 f"cannot compact {self.delta.occupancy} records: pivot "
                 f"selection needs >= {self.delta.min_build}; keep inserting "
                 f"or lower shard_cfg.num_pivots")
-        self._seal_count += 1
-        while any(s.key == f"sealed:{self._seal_count}"
-                  for s in self.shards):
-            self._seal_count += 1
-        handle = self.add_shard(f"sealed:{self._seal_count}",
-                                self.delta.data,
-                                global_ids=self.delta.global_ids)
-        self.delta.take()
-        self.stats.compactions += 1
-        self.stats.delta_occupancy = 0
-        return handle
+        frozen = FrozenDelta(delta=self.delta, frames=self._frames,
+                             segs=list(self._delta_segs),
+                             fold=len(self.shards) + 17,
+                             key=self._next_seal_key())
+        self._sealing = self.delta
+        self._sealing_frames = self._frames
+        self._sealing_segs = frozen.segs
+        self.delta = DeltaShard(self.cfg.shard_cfg, pad=self.cfg.delta_pad,
+                                seed=self.cfg.seed + 1)
+        self._frames = []
+        if self.wal is not None:
+            self.wal.roll()
+            self._delta_segs = [self.wal.active_segment]
+        else:
+            self._delta_segs = []
+        self._refresh_gauges()
+        return frozen
+
+    def _finish_seal(self, frozen: FrozenDelta,
+                     handle: ShardHandle) -> None:
+        """Swap the sealed shard in atomically, then reclaim WAL space.
+
+        Snapshot (when storage is attached) happens before the swap; the
+        frozen segments are dropped only after the manifest lists the new
+        shard, so every kill point leaves a replayable log: frames whose
+        gids a sealed shard covers are skipped at replay.
+        """
+        from repro.fleet.lifecycle.snapshot import save_shard, shard_slug
+        with self._lock:
+            storage = self.storage_dir
+            slug = shard_slug(handle.key, set(self._shard_dirs.values())) \
+                if storage is not None else None
+        if storage is not None:             # the slow write, off the lock
+            save_shard(storage / "shards" / slug, handle)
+        with self._lock:
+            if storage is None and self.storage_dir is not None:
+                # attach_storage() raced the build: it already flushed the
+                # frozen frames into a rolled segment, so the snapshot must
+                # exist before those segments are dropped below
+                storage = self.storage_dir
+                slug = shard_slug(handle.key, set(self._shard_dirs.values()))
+                save_shard(storage / "shards" / slug, handle)
+            self.shards.append(handle)
+            self._ensure_router(frozen.data)
+            self.router.register(handle.key,
+                                 self.router.summarize(frozen.data))
+            self._placement = None
+            if storage is not None:
+                from repro.fleet.lifecycle.snapshot import write_manifest
+                self._shard_dirs[handle.key] = slug
+                write_manifest(self, storage)
+            self._sealing = None
+            self._sealing_frames = []
+            segs, self._sealing_segs = self._sealing_segs, []
+            self.stats.compactions += 1
+            self._refresh_gauges()
+        if self.wal is not None and segs:
+            self.wal.drop(segs)
+
+    def _abort_seal(self, frozen: FrozenDelta) -> None:
+        """Undo a failed seal: fold the frozen contents back into one live
+        delta (replaying the logged frames in order) so no buffered insert
+        is lost and a later compact retries over everything."""
+        with self._lock:
+            frames = self._sealing_frames + self._frames
+            restored = DeltaShard(self.cfg.shard_cfg, pad=self.cfg.delta_pad,
+                                  seed=self.cfg.seed + 1)
+            for g, b in frames:
+                restored.insert(b, g)
+            self.delta = restored
+            self._frames = frames
+            self._delta_segs = self._sealing_segs + self._delta_segs
+            self._sealing = None
+            self._sealing_frames = []
+            self._sealing_segs = []
+            self._refresh_gauges()
+
+    def compact(self) -> Optional[ShardHandle]:
+        """Seal the delta into an immutable shard (full INX rebuild).
+
+        The rebuild always runs on a worker thread over a frozen delta —
+        queries keep hitting the frozen contents until the sealed shard
+        swaps in atomically — and this method waits for it, so the
+        synchronous contract is unchanged: global ids are preserved and
+        answers on the same contents are bit-identical (tested).  A failed
+        build folds the frozen contents back into the live delta, so every
+        buffered insert stays queryable.  With storage attached, the
+        sealed shard is snapshotted and the manifest rewritten *before*
+        the WAL segments are truncated.  Use :meth:`compact_async` for the
+        non-blocking ticket.
+
+        Returns the new ShardHandle, or None when the delta is empty;
+        raises ValueError when the delta holds fewer than ``num_pivots``
+        records (pivot selection needs that many samples).
+        """
+        ticket = self._seal_ticket
+        if ticket is not None:
+            ticket.wait()
+        ticket = self.compact_async()
+        return ticket.wait() if ticket is not None else None
+
+    def compact_async(self):
+        """Trigger a background seal; returns a
+        :class:`repro.fleet.lifecycle.compactor.CompactionTicket` (or None
+        when the delta is empty, or the in-flight ticket when one is
+        already running).  Raises like :meth:`compact` when the delta is
+        too small to build."""
+        from repro.fleet.lifecycle.compactor import \
+            start_background_compaction
+        return start_background_compaction(self)
+
+    # -- maintenance (LSM merge + retirement) -----------------------------
+    def maintenance(self, policy=None, *, now: Optional[float] = None) -> dict:
+        """One lifecycle tick: retire aged shards, merge small neighbours.
+
+        ``policy`` defaults to ``self.merge_policy`` (or the
+        :class:`repro.fleet.lifecycle.merge.MergePolicy` defaults).  Exact
+        answers over the surviving records are unchanged by merging —
+        global ids are preserved and the merged shard is rebuilt over the
+        concatenated records.  Returns a report dict (``merged``,
+        ``retired`` key lists).
+        """
+        from repro.fleet.lifecycle.merge import run_maintenance
+        return run_maintenance(self, policy=policy, now=now)
 
     # -- query ------------------------------------------------------------
-    def _query_sealed_host(self, queries: np.ndarray, k: int,
+    def _query_sealed_host(self, shards, queries: np.ndarray, k: int,
                            mask: np.ndarray, variant: str,
                            use_kernel: Optional[bool],
                            best_d: np.ndarray, best_g: np.ndarray,
                            touched: np.ndarray, scanned: np.ndarray) -> None:
         """The host-loop oracle: one ``knn_query`` dispatch per sealed
         shard, fused on the host in shard order (accumulators in place)."""
-        for si, shard in enumerate(self.shards):
+        for si, shard in enumerate(shards):
             qsel = np.nonzero(mask[:, si])[0]
             if not len(qsel):
                 continue
@@ -465,7 +890,7 @@ class IndexFleet:
                 candidates_scanned(qp, shard.index.store), np.int64)
             self.stats.observe_shard(shard.key, len(qsel), int(pt.sum()))
 
-    def _query_sealed_mesh(self, queries: np.ndarray, k: int,
+    def _query_sealed_mesh(self, shards, pl, queries: np.ndarray, k: int,
                            mask: np.ndarray, variant: str,
                            use_kernel: Optional[bool],
                            best_d: np.ndarray, best_g: np.ndarray,
@@ -475,11 +900,10 @@ class IndexFleet:
         routing expressed as masked-out rows, and run one shard_map that
         refines every resident shard per device and folds the answers in
         shard order.  Bit-identical to :meth:`_query_sealed_host`."""
-        pl = self._ensure_placement()
         qn = len(queries)
         qj = jnp.asarray(queries)
         plans = []
-        for si, shard in enumerate(self.shards):
+        for si, shard in enumerate(shards):
             if not mask[:, si].any():   # host loop skips unrouted shards:
                 plans.append(None)      # don't plan what won't execute
                 continue
@@ -492,7 +916,7 @@ class IndexFleet:
         sp = np.full((pl.num_slots, qn, mp), -1, np.int32)
         lo = np.zeros((pl.num_slots, qn, mp), np.int32)
         hi = np.zeros((pl.num_slots, qn, mp), np.int32)
-        for si, (shard, qp) in enumerate(zip(self.shards, plans)):
+        for si, (shard, qp) in enumerate(zip(shards, plans)):
             if qp is None:
                 continue
             w = int(qp.sel_part.shape[-1])
@@ -512,6 +936,27 @@ class IndexFleet:
         dist, gid = pl.dispatch(queries, sp, lo, hi, k,
                                 use_kernel=use_kernel)
         best_d[:], best_g[:] = dist, gid
+
+    def _merge_delta_answer(self, delta: DeltaShard, queries: np.ndarray,
+                            k: int, variant: str,
+                            use_kernel: Optional[bool],
+                            best_d: np.ndarray, best_g: np.ndarray,
+                            touched: np.ndarray, scanned: np.ndarray):
+        """Fold one delta's (frozen or active) answer into the accumulators
+        in place; returns the updated (best_d, best_g)."""
+        res = delta.query(queries, k, variant=variant, use_kernel=use_kernel)
+        if res is None:
+            return best_d, best_g
+        dist, gid, dt, dsc = res
+        gg = np.where(gid >= 0,
+                      delta.global_ids[np.maximum(gid, 0)],
+                      -1).astype(np.int32)
+        md, mg = merge_topk(jnp.asarray(best_d), jnp.asarray(best_g),
+                            jnp.asarray(dist), jnp.asarray(gg), k)
+        touched += dt
+        scanned += dsc
+        self.stats.observe_shard(self.DELTA_KEY, len(queries), int(dt.sum()))
+        return np.asarray(md), np.asarray(mg)
 
     def query(self, queries: np.ndarray, k: int = 0, *,
               routing: str = "signature", variant: str = "adaptive",
@@ -540,6 +985,11 @@ class IndexFleet:
             attached, else ``"host"``.  Both placements return bit-
             identical results; the delta is always executed host-side.
 
+        During a background compaction the frozen delta keeps serving
+        (merged between the sealed shards and the live delta), so answers
+        over unchanged contents are identical before, during, and after
+        the seal.
+
         Returns:
           (dist ``[Q, k]`` ascending ED, gid ``[Q, k]`` fleet-global ids,
           info).  Rows with fewer than k candidates across the routed
@@ -558,39 +1008,52 @@ class IndexFleet:
         best_g = np.full((qn, k), -1, np.int32)
         touched = np.zeros(qn, np.int64)
         scanned = np.zeros(qn, np.int64)
-        s = len(self.shards)
 
-        if routing == "exhaustive" or self.router is None or s == 0:
-            mask = np.ones((qn, s), dtype=bool)
-        else:
-            mask = self.router.route(queries, fanout or self.cfg.fanout)
+        # consistent view: shard list + both deltas are captured under the
+        # lock; the (slow) sealed-shard execution then runs off-lock.  The
+        # captured delta object stays correct even if a freeze/seal
+        # re-points ``self.delta`` meanwhile — freezing never mutates it.
+        with self._lock:
+            shards = list(self.shards)
+            sealing = self._sealing
+            delta = self.delta
+            s = len(shards)
+            pl = self._ensure_placement() \
+                if placement == "mesh" and s else None
+            lifecycle = self.stats.lifecycle_snapshot()
+            # mask under the same lock: the router registry is only ever
+            # resized (seal/merge/retire) while it is held, so the mask
+            # width always matches the captured shard list
+            if routing == "exhaustive" or self.router is None or s == 0:
+                mask = np.ones((qn, s), dtype=bool)
+            else:
+                mask = self.router.route(queries,
+                                         fanout or self.cfg.fanout)
 
         if s:
-            run_sealed = self._query_sealed_mesh if placement == "mesh" \
-                else self._query_sealed_host
-            run_sealed(queries, k, mask, variant, use_kernel,
-                       best_d, best_g, touched, scanned)
+            if placement == "mesh":
+                self._query_sealed_mesh(shards, pl, queries, k, mask,
+                                        variant, use_kernel, best_d, best_g,
+                                        touched, scanned)
+            else:
+                self._query_sealed_host(shards, queries, k, mask, variant,
+                                        use_kernel, best_d, best_g,
+                                        touched, scanned)
 
-        delta_res = self.delta.query(queries, k, variant=variant,
-                                     use_kernel=use_kernel)
-        if delta_res is not None:
-            dist, gid, dt, dsc = delta_res
-            gg = np.where(gid >= 0,
-                          self.delta.global_ids[np.maximum(gid, 0)],
-                          -1).astype(np.int32)
-            md, mg = merge_topk(jnp.asarray(best_d), jnp.asarray(best_g),
-                                jnp.asarray(dist), jnp.asarray(gg), k)
-            best_d, best_g = np.asarray(md), np.asarray(mg)
-            touched += dt
-            scanned += dsc
-            self.stats.observe_shard(self.DELTA_KEY, qn, int(dt.sum()))
-
-        self.stats.queries += qn
-        self.stats.routed_pairs += int(mask.sum())
-        self.stats.exhaustive_pairs += qn * s
+        if sealing is not None:       # frozen mid-compaction: immutable
+            best_d, best_g = self._merge_delta_answer(
+                sealing, queries, k, variant, use_kernel,
+                best_d, best_g, touched, scanned)
+        with self._lock:              # live delta: serialize vs. inserts
+            best_d, best_g = self._merge_delta_answer(
+                delta, queries, k, variant, use_kernel,
+                best_d, best_g, touched, scanned)
+            self.stats.queries += qn
+            self.stats.routed_pairs += int(mask.sum())
+            self.stats.exhaustive_pairs += qn * s
         return best_d, best_g, FleetQueryInfo(
             partitions_touched=touched, candidates_scanned=scanned,
-            routed_mask=mask)
+            routed_mask=mask, lifecycle=lifecycle)
 
     def scan_exact(self, queries: np.ndarray, k: int = 0, *,
                    use_kernel: Optional[bool] = None, mesh=None
@@ -613,12 +1076,16 @@ class IndexFleet:
         queries = np.asarray(queries, dtype=np.float32)
         k = k or self.cfg.shard_cfg.k
         mesh = mesh if mesh is not None else self.mesh
-        stores = [s.index.store for s in self.shards]
-        gid_maps = [s.global_ids for s in self.shards]
-        dstore = self.delta.store()
-        if dstore is not None:
-            stores.append(dstore)
-            gid_maps.append(self.delta.global_ids)
+        with self._lock:
+            stores = [s.index.store for s in self.shards]
+            gid_maps = [s.global_ids for s in self.shards]
+            for delta in (self._sealing, self.delta):
+                if delta is None:
+                    continue
+                dstore = delta.store()
+                if dstore is not None:
+                    stores.append(dstore)
+                    gid_maps.append(delta.global_ids)
         if not stores:
             return (np.full((len(queries), k), PAD_DIST, np.float32),
                     np.full((len(queries), k), -1, np.int32))
@@ -654,3 +1121,19 @@ class IndexFleet:
         self.stats.routing_audits += 1
         self.stats.routing_overlap += precision
         return precision
+
+
+def _recover_wal_rebase(storage_dir: Path) -> None:
+    """Finish a WAL rebase interrupted by a crash (see
+    :meth:`IndexFleet._attach_storage_rebased`): ``wal.rebase`` is only
+    renamed into place after it is fully written, so whichever directory
+    survives is complete."""
+    import shutil
+    wal_dir = storage_dir / "wal"
+    rebase = storage_dir / "wal.rebase"
+    old = storage_dir / "wal.old"
+    if not wal_dir.exists() and rebase.exists():
+        rebase.rename(wal_dir)          # crash between the two renames
+    for leftover in (rebase, old):
+        if leftover.exists():
+            shutil.rmtree(leftover)

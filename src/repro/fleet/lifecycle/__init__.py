@@ -1,0 +1,34 @@
+"""Fleet lifecycle plane — durability, background compaction, shard aging.
+
+The in-memory :class:`repro.fleet.IndexFleet` is a process-lifetime object;
+this package is what makes it survive and stay healthy over time:
+
+  * :mod:`~repro.fleet.lifecycle.wal` — a binary write-ahead log that
+    ``IndexFleet.insert`` appends to *before* the delta scatter, so a
+    restart replays every acknowledged insert batch-for-batch;
+  * :mod:`~repro.fleet.lifecycle.snapshot` — sealed-shard snapshots
+    (store arrays + trie skeleton + pivots + global ids as npz + JSON
+    manifest, atomic tmp-dir rename) and the fleet-level
+    ``save``/``open`` manifest;
+  * :mod:`~repro.fleet.lifecycle.compactor` — background compaction: the
+    INX rebuild runs on a worker thread over a frozen delta copy while
+    queries keep hitting the old delta, then the sealed shard swaps in
+    atomically and the frozen WAL segments are truncated;
+  * :mod:`~repro.fleet.lifecycle.merge` — the LSM analogy: a policy that
+    merges small adjacent sealed shards and retires shards past a time
+    horizon, driven by ``IndexFleet.maintenance()`` /
+    ``FleetEngine.maintenance()`` ticks.
+
+The crash contract is gid-based, not ordering-based: a WAL frame whose
+global ids are already covered by a sealed shard is skipped at replay, so
+every kill point between WAL append → delta scatter → compact swap → WAL
+truncate replays to a fleet whose answers are bit-identical to the
+uninterrupted run (``tests/test_fleet_lifecycle.py``).
+"""
+from repro.fleet.lifecycle.compactor import CompactionTicket
+from repro.fleet.lifecycle.merge import MergePolicy
+from repro.fleet.lifecycle.snapshot import load_shard, save_shard
+from repro.fleet.lifecycle.wal import WriteAheadLog
+
+__all__ = ["WriteAheadLog", "CompactionTicket", "MergePolicy",
+           "save_shard", "load_shard"]

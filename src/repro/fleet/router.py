@@ -76,6 +76,21 @@ class SignatureRouter:
         self.keys.append(key)
         self._summaries.append(np.asarray(summary, dtype=np.float32))
 
+    def replace_span(self, pos: int, count: int, key: Optional[str] = None,
+                     summary: Optional[np.ndarray] = None) -> None:
+        """Splice the registry: drop ``count`` entries at ``pos`` and, when
+        ``key`` is given, insert its ``(key, summary)`` in their place.
+
+        The registry must stay index-parallel to the fleet's shard list;
+        this is how lifecycle maintenance (shard merge / retirement —
+        ``repro.fleet.lifecycle.merge``) keeps it that way.
+        """
+        ins_keys = [key] if key is not None else []
+        ins_sums = [np.asarray(summary, dtype=np.float32)] \
+            if key is not None else []
+        self.keys[pos: pos + count] = ins_keys
+        self._summaries[pos: pos + count] = ins_sums
+
     # -- routing ----------------------------------------------------------
     def score(self, queries: np.ndarray) -> np.ndarray:
         """``[Q, S]`` affinity of each query to each registered shard."""

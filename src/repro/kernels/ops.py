@@ -48,7 +48,9 @@ def fused_refine_topk(data, norms, rec_dfs, rec_gid, queries,
 
     The plan must be sorted by partition id along the entry axis.  Returns
     ``[Q, k]`` (squared distances, gids); never materializes the
-    ``[Q, MP, cap]`` distance tensor or the gathered candidate rows.
+    ``[Q, MP, cap]`` distance tensor or the gathered candidate rows.  The
+    candidate-block width is picked at trace time from the store capacity
+    (``pick_block_c``) unless ``block_c=`` pins it.
     """
     return _rt.refine_topk(data, norms, rec_dfs, rec_gid, queries,
                            sel_part, sel_lo, sel_hi, k,

@@ -39,6 +39,7 @@ to the ``PAD_DIST``/gid=-1 convention — identical to the dense path.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +48,19 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_C = 512
 _INF = 3.4e38  # python float: jnp scalars would be captured as consts
+
+
+def pick_block_c(cap: int) -> int:
+    """Trace-time candidate-block size for a store of slot capacity ``cap``.
+
+    First step of the ROADMAP "kernel autotuning" item: instead of a fixed
+    ``DEFAULT_BLOCK_C`` the block is ``min(512, next_pow2(cap))`` — small-
+    cap stores (fleet deltas, sealed delta shards) stop streaming 512-wide
+    blocks that are mostly index-masked padding, while keeping the block a
+    power of two (lane-friendly) and a single block whenever the whole
+    capacity fits.  Callers pin ``block_c`` explicitly to override.
+    """
+    return min(DEFAULT_BLOCK_C, 1 << max(int(cap) - 1, 0).bit_length())
 
 
 def _refine_topk_kernel(sel_ref, q_ref, data_ref, norms_ref, dfs_ref,
@@ -119,7 +133,7 @@ def refine_topk(data: jnp.ndarray, norms: jnp.ndarray, rec_dfs: jnp.ndarray,
                 rec_gid: jnp.ndarray, queries: jnp.ndarray,
                 sel_part: jnp.ndarray, sel_lo: jnp.ndarray,
                 sel_hi: jnp.ndarray, k: int, *,
-                block_c: int = DEFAULT_BLOCK_C,
+                block_c: Optional[int] = None,
                 interpret: bool = False):
     """Streaming fused masked-ED + top-k over the partition store.
 
@@ -131,6 +145,10 @@ def refine_topk(data: jnp.ndarray, norms: jnp.ndarray, rec_dfs: jnp.ndarray,
         id along the entry axis** (pads first — the dedupe predicate needs
         same-partition entries contiguous, as in the dense path).
       k: answers per query.
+      block_c: candidate-block width; None (default) picks it at trace
+        time from the store capacity via :func:`pick_block_c`.  Any value
+        is numerically equivalent — blocking never changes the per-record
+        distances or the merge order.
 
     Returns:
       (d2, gid): ``[Q, k]`` ascending **squared** ED (+inf beyond the
@@ -143,7 +161,8 @@ def refine_topk(data: jnp.ndarray, norms: jnp.ndarray, rec_dfs: jnp.ndarray,
     if qn == 0 or mp == 0:
         return (jnp.full((qn, k), _INF, jnp.float32),
                 jnp.full((qn, k), -1, jnp.int32))
-    bc = min(block_c, max(cap, 1))
+    bc = pick_block_c(cap) if block_c is None \
+        else min(block_c, max(cap, 1))
     nblocks = pl.cdiv(cap, bc)
 
     store_block = lambda q, s, c, sel: (jnp.maximum(sel[q, s], 0), c)

@@ -108,6 +108,16 @@ class EngineStats:
         n = self.plan_cache_hits + self.plan_cache_misses
         return self.plan_cache_hits / n if n else 0.0
 
+    def snapshot(self) -> dict:
+        """Counters + derived rates as one plain dict (for benchmark
+        artifacts and operator output, mirroring ``FleetStats.snapshot``)."""
+        d = dataclasses.asdict(self)
+        d["queries_per_sec"] = self.queries_per_sec
+        d["mean_partitions_touched"] = self.mean_partitions_touched
+        d["mean_candidates_scanned"] = self.mean_candidates_scanned
+        d["plan_cache_hit_rate"] = self.plan_cache_hit_rate
+        return d
+
 
 class BatchedServingLoop:
     """Fixed-shape batch admission shared by every serving executor.
@@ -128,6 +138,12 @@ class BatchedServingLoop:
 
     def _execute(self, qbatch: np.ndarray, nlive: int):
         raise NotImplementedError
+
+    def _after_tick(self) -> None:
+        """Hook run after each completed queue tick (between batches — off
+        the per-query latency path).  Executors with background upkeep
+        override it: the fleet engine runs its lifecycle maintenance here
+        (compaction triggers, shard merge/retirement)."""
 
     # -- request-queue serving -------------------------------------------
     def submit(self, req: QueryRequest) -> None:
@@ -170,6 +186,7 @@ class BatchedServingLoop:
             req.done = True
             metrics.append(req.metrics)
         self.stats.observe(metrics)
+        self._after_tick()
         return len(live)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> None:

@@ -49,9 +49,16 @@ def test_markdown_links_resolve(doc):
 
 def test_architecture_covers_every_package():
     """The which-file-owns-what table must keep naming every repro
-    package, so new subsystems get documented when they land."""
+    package — including nested subpackages like ``fleet/lifecycle`` — so
+    new subsystems get documented when they land."""
     text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
-    packages = sorted(p.name for p in (REPO / "src" / "repro").iterdir()
-                      if p.is_dir() and (p / "__init__.py").exists())
-    missing = [pkg for pkg in packages if pkg not in text]
+    root = REPO / "src" / "repro"
+    needles = []
+    for init in sorted(root.rglob("__init__.py")):
+        rel = init.parent.relative_to(root)
+        if str(rel) == ".":
+            continue
+        # top-level packages by name; subpackages by their slash path
+        needles.append(str(rel) if len(rel.parts) > 1 else rel.name)
+    missing = [pkg for pkg in needles if pkg not in text]
     assert not missing, f"ARCHITECTURE.md does not mention: {missing}"

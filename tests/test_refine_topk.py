@@ -16,7 +16,8 @@ from repro.core.index import PartitionStore
 from repro.core.refine import (PAD_DIST, _sort_by_partition, refine,
                                resolve_use_kernel)
 from repro.kernels import ref
-from repro.kernels.refine_topk import refine_topk
+from repro.kernels.refine_topk import (DEFAULT_BLOCK_C, pick_block_c,
+                                       refine_topk)
 
 DTOL = dict(rtol=1e-5, atol=1e-5)
 
@@ -52,21 +53,24 @@ def _fused(store, queries, sp, lo, hi, k, **kw):
 class TestParityGrid:
     """Acceptance: fused ≡ dense across the Q×slots×cap×k sweep."""
 
-    @pytest.mark.parametrize("q,mp,cap,k", [
-        (1, 1, 8, 1),        # degenerate single-everything
-        (3, 4, 12, 5),
-        (5, 9, 12, 7),       # multiple entries per partition (dedupe live)
-        (2, 6, 33, 20),      # cap not a lane multiple
-        (4, 3, 16, 10),
+    @pytest.mark.parametrize("q,mp,cap,k,block_c", [
+        (1, 1, 8, 1, None),      # degenerate single-everything
+        (3, 4, 12, 5, None),
+        (5, 9, 12, 7, None),     # multiple entries per partition (dedupe live)
+        (2, 6, 33, 20, None),    # cap not a lane multiple
+        (4, 3, 16, 10, None),
+        (3, 5, 40, 8, 16),       # explicit non-default block (cap % bc != 0)
+        (3, 5, 12, 6, 256),      # explicit block far above cap (clamped)
     ])
-    def test_matches_dense_refine(self, q, mp, cap, k):
+    def test_matches_dense_refine(self, q, mp, cap, k, block_c):
         rng = np.random.default_rng(q * 101 + mp * 7 + cap)
         store = _mkstore(rng, 6, cap, 32)
         queries = jnp.asarray(rng.normal(size=(q, 32)).astype(np.float32))
         sp, lo, hi = _mkplan(rng, q, mp, 6)
         d_ref, g_ref = refine(store, queries, sp, lo, hi, k,
                               use_kernel=False)
-        dist, gid = _fused(store, queries, sp, lo, hi, k)
+        kw = {} if block_c is None else {"block_c": block_c}
+        dist, gid = _fused(store, queries, sp, lo, hi, k, **kw)
         np.testing.assert_array_equal(np.asarray(g_ref), gid)
         np.testing.assert_allclose(np.asarray(d_ref), dist, **DTOL)
 
@@ -218,3 +222,29 @@ class TestEndToEnd:
         assert resolve_use_kernel(False) is False
         # fused kernel on accelerators, dense oracle elsewhere (CPU CI)
         assert resolve_use_kernel(None) == (jax.default_backend() == "tpu")
+
+
+class TestBlockAutotune:
+    """First autotuning step: BLOCK_C picked at trace time from cap."""
+
+    def test_pick_is_capped_next_pow2(self):
+        assert pick_block_c(1) == 1
+        assert pick_block_c(12) == 16            # pow2 cover, no 512 padding
+        assert pick_block_c(100) == 128
+        assert pick_block_c(512) == DEFAULT_BLOCK_C
+        assert pick_block_c(4096) == DEFAULT_BLOCK_C  # streams in 512 blocks
+
+    @pytest.mark.parametrize("cap", [12, 100, 600])
+    def test_auto_block_parity(self, cap):
+        """The default (auto) block matches dense — including the small-cap
+        case where the single auto block exceeds cap and the tail is
+        index-masked."""
+        rng = np.random.default_rng(cap)
+        store = _mkstore(rng, 5, cap, 16)
+        queries = jnp.asarray(rng.normal(size=(3, 16)).astype(np.float32))
+        sp, lo, hi = _mkplan(rng, 3, 4, 5)
+        d_ref, g_ref = refine(store, queries, sp, lo, hi, 6,
+                              use_kernel=False)
+        dist, gid = _fused(store, queries, sp, lo, hi, 6)   # block_c=None
+        np.testing.assert_array_equal(np.asarray(g_ref), gid)
+        np.testing.assert_allclose(np.asarray(d_ref), dist, **DTOL)
