@@ -17,6 +17,13 @@ host they measure the fan-out overlap.  Either way the bench-trend CI step
 tracks the host/mesh ratio run over run, and recall must be identical
 between placements (the mesh path is bit-identical by construction).
 
+Each placement cell is timed after one untimed warm-up call (compilation
+plus, on the mesh path, the device-plan cache fill), so the numbers are
+steady-state serving throughput; every cell also carries the per-stage
+wall-time breakdown — ``plan_ms`` / ``refine_ms`` / ``merge_ms`` from
+``FleetQueryInfo.stage_ms`` — so the device-resident-planning win shows up
+as a column of its own in the bench-trend table, not just in total qps.
+
 The **lifecycle** rows measure the fleet's persistence/maintenance plane
 (``repro.fleet.lifecycle``): wall time of one delta seal (``compaction_ms``
 — the INX rebuild that now runs on the compactor worker thread) and of a
@@ -56,6 +63,12 @@ ROUTING_MODES = ("signature", "exhaustive")
 PLACEMENTS = ("host", "mesh")
 DELTA_FILLS = (0.0, 0.5)          # fraction of delta_capacity streamed in
 DELTA_CAPACITY = 1_024
+
+
+def mesh_devices() -> int:
+    """Mesh width for the placement sweep: up to 4 devices (the CI cell
+    forces 8 host devices; 4 keeps one device per shard on the big cell)."""
+    return min(jax.device_count(), 4)
 
 
 def lifecycle_cells() -> list:
@@ -102,7 +115,7 @@ def lifecycle_cells() -> list:
 
 def run(lifecycle_only: bool = False) -> None:
     if lifecycle_only:
-        _write_artifact(lifecycle_cells(), mesh_devices=jax.device_count())
+        _write_artifact(lifecycle_cells(), mesh_devices=mesh_devices())
         return
     cfg = default_cfg(k=K)
     base = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(0),
@@ -128,10 +141,15 @@ def run(lifecycle_only: bool = False) -> None:
                 fleet.insert(fresh[:n_fill])
             contents = np.concatenate([base[:per * shards], fresh[:n_fill]])
             _, exact_ids = exact_knn(queries, contents, K)
-            fleet.attach_mesh(make_mesh((jax.device_count(),), ("data",)))
+            fleet.attach_mesh(make_mesh((mesh_devices(),), ("data",)))
 
             for routing in ROUTING_MODES:
                 for placement in PLACEMENTS:
+                    # warm-up: compile the per-placement programs (and, on
+                    # the mesh path, populate the device-plan cache) so the
+                    # timed call measures steady-state serving throughput
+                    fleet.query(queries, K, routing=routing,
+                                placement=placement)
                     (dist, gid, info), secs = timed(
                         lambda r=routing, p=placement: fleet.query(
                             queries, K, routing=r, placement=p))
@@ -142,11 +160,13 @@ def run(lifecycle_only: bool = False) -> None:
                         if info.routed_mask.size else 0.0
                     precision = fleet.audit_routing(queries, K) \
                         if routing == "signature" else 1.0
+                    stage = info.stage_ms or {}
                     tag = (f"fleet/s{shards}/fill{fill:.1f}/{routing}"
                            f"/{placement}")
                     emit(tag, 1e6 / qps if qps else 0.0,
                          f"qps={qps:.1f};recall={r:.3f};parts={parts:.1f};"
-                         f"precision={precision:.3f}")
+                         f"precision={precision:.3f};"
+                         f"plan_ms={stage.get('plan_ms', 0.0):.1f}")
                     cells.append({
                         "shards": shards, "delta_fill": fill,
                         "routing": routing, "placement": placement,
@@ -155,12 +175,15 @@ def run(lifecycle_only: bool = False) -> None:
                         "mean_partitions_touched": round(parts, 2),
                         "mean_fanout": round(fanout, 2),
                         "routing_precision": round(float(precision), 4),
+                        "plan_ms": round(stage.get("plan_ms", 0.0), 2),
+                        "refine_ms": round(stage.get("refine_ms", 0.0), 2),
+                        "merge_ms": round(stage.get("merge_ms", 0.0), 2),
                         "delta_occupancy": fleet.delta.occupancy,
                         "num_queries": NUM_QUERIES, "k": K,
                     })
 
     cells.extend(lifecycle_cells())
-    _write_artifact(cells, mesh_devices=jax.device_count())
+    _write_artifact(cells, mesh_devices=mesh_devices())
 
 
 def _write_artifact(cells: list, *, mesh_devices: int) -> None:

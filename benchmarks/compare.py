@@ -16,8 +16,12 @@ registered benchmark shows up in the trend the run it first writes an
 artifact.
 
 Throughput noise on shared CI runners is large; the output is **warn-only**
-— deltas beyond ``--warn-pct`` are flagged with ⚠ but the exit code is
-always 0.  Use it locally the same way:
+by default — deltas beyond ``--warn-pct`` are flagged with ⚠ but the exit
+code stays 0.  ``--fail-on-regression METRIC:PCT`` (repeatable) opts
+specific metrics into a hard gate: the process exits 1 when such a metric
+regresses beyond PCT percent in any shared cell — the first step toward
+promoting the trend table from advisory to enforced.  Use it locally the
+same way:
 
     PYTHONPATH=src python -m benchmarks.compare artifacts/prev artifacts
 """
@@ -34,6 +38,7 @@ METRICS = (
     "queries_per_sec", "recall", "mean_partitions_touched",
     "mean_candidates_scanned", "routing_precision", "mean_fanout",
     "compaction_ms", "restart_replay_ms",       # fleet lifecycle columns
+    "plan_ms", "refine_ms", "merge_ms",         # fleet per-stage breakdown
 )
 # metrics where bigger is better (the rest are informational)
 HIGHER_IS_BETTER = {"queries_per_sec", "recall", "routing_precision"}
@@ -55,8 +60,15 @@ def load_cells(path: Path) -> Dict[Tuple, dict]:
     return {_cell_key(c): c for c in doc.get("cells", [])}
 
 
-def compare_file(old: Path, new: Path, warn_pct: float) -> List[str]:
-    """Markdown lines for one benchmark file pair."""
+def compare_file(old: Path, new: Path, warn_pct: float,
+                 fail_on: Optional[Dict[str, float]] = None,
+                 regressions: Optional[List[str]] = None) -> List[str]:
+    """Markdown lines for one benchmark file pair.
+
+    ``fail_on`` maps metric name → max tolerated regression percent (from
+    ``--fail-on-regression``); matching cells whose delta exceeds it are
+    appended to ``regressions`` (the caller turns those into exit code 1).
+    """
     lines = [f"### {new.name}", ""]
     if not new.exists():
         return lines + [f"_fresh run produced no {new.name} — skipped_", ""]
@@ -90,6 +102,12 @@ def compare_file(old: Path, new: Path, warn_pct: float) -> List[str]:
             flag = " ⚠" if regressed else ""
             lines.append(f"| {_fmt_key(nc)} | {m} | {ov:g} | {nv:g} | "
                          f"{pct:+.1f}%{flag} |")
+            if fail_on and m in fail_on:
+                bad_pct = -pct if m in HIGHER_IS_BETTER else pct
+                if bad_pct > fail_on[m]:
+                    regressions.append(
+                        f"{new.name}: {_fmt_key(nc)} {m} regressed "
+                        f"{pct:+.1f}% (limit {fail_on[m]:g}%)")
     for key in added:                    # e.g. a new sweep column value
         lines.append(f"| {_fmt_key(new_cells[key])} | — | — | — | "
                      f"new cell, no baseline |")
@@ -120,16 +138,38 @@ def main() -> None:
                          "BENCH_*.json in new_dir + the defaults)")
     ap.add_argument("--warn-pct", type=float, default=15.0,
                     help="flag deltas beyond this magnitude (default 15)")
+    ap.add_argument("--fail-on-regression", action="append", default=[],
+                    metavar="METRIC:PCT",
+                    help="opt-in hard gate (repeatable): exit 1 when METRIC "
+                         "regresses beyond PCT percent in any shared cell "
+                         "(e.g. queries_per_sec:25).  Without it the table "
+                         "stays warn-only.")
     args = ap.parse_args()
+
+    fail_on: Dict[str, float] = {}
+    for spec in args.fail_on_regression:
+        metric, _, pct = spec.partition(":")
+        if not pct:
+            ap.error(f"--fail-on-regression wants METRIC:PCT, got {spec!r}")
+        if metric not in METRICS:
+            ap.error(f"unknown metric {metric!r}; choose from {METRICS}")
+        fail_on[metric] = float(pct)
 
     files = args.files if args.files is not None \
         else discover_files(Path(args.new_dir), Path(args.old_dir))
-    out = ["## Bench trend (warn-only)", ""]
+    gated = f"gated on {sorted(fail_on)}" if fail_on else "warn-only"
+    out = [f"## Bench trend ({gated})", ""]
+    regressions: List[str] = []
     for name in files:
         out += compare_file(Path(args.old_dir) / name,
-                            Path(args.new_dir) / name, args.warn_pct)
+                            Path(args.new_dir) / name, args.warn_pct,
+                            fail_on=fail_on, regressions=regressions)
     print("\n".join(out))
-    sys.exit(0)          # warn-only by design: never fail the job
+    if regressions:
+        print("\n".join(["", "**FAIL: gated metric regressed**"]
+                        + [f"- {r}" for r in regressions]))
+        sys.exit(1)
+    sys.exit(0)          # warn-only by default: never fail the job
 
 
 if __name__ == "__main__":

@@ -39,6 +39,22 @@ memory.  Override with ``ClimberConfig.query_max_slots`` or the
 :func:`knn_query` composes featurize → :func:`plan` →
 :func:`repro.core.refine.dispatch_refine`, so a ``mesh=`` argument is all it
 takes to execute the refine stage sharded over the data axis.
+
+Device-resident planning
+------------------------
+
+Every planner also runs *inside* a traced device program against a padded
+shard skeleton (the fleet's stacked-trie mesh planner,
+``repro.fleet.device_plan``).  The static shapes there are fleet-wide
+maxima, so the planner receives a :class:`ShardPlanContext` carrying the
+shard's *real* (traced) group/candidate/partition counts next to the padded
+static widths; candidate columns beyond the real counts are masked to the
+``_BIG`` sentinel before any top-k / argmin, which keeps the device plan's
+live entries identical (values and order) to the host planner's — the
+bit-identity contract the mesh fleet path is tested against.  Planners that
+support the device path are registered in a parallel registry
+(:func:`register_device_planner` / :func:`get_device_planner`); the four
+built-ins all do.
 """
 from __future__ import annotations
 
@@ -54,6 +70,23 @@ from repro.core.index import ClimberIndex, PartitionStore
 from repro.core.traversal import descend
 
 _BIG = jnp.float32(1e9)
+
+
+class ShardPlanContext(NamedTuple):
+    """Real-vs-padded shape context for planning inside a device program.
+
+    The fleet's stacked-trie planner pads every shard skeleton to fleet-wide
+    maxima so one jitted pass covers all shards; the planner then needs the
+    shard's *real* counts (traced scalars) next to the padded static widths
+    to mask the padding out before any top-k / arg-reduction.  ``None`` ctx
+    (the host path) means real == static and no masking is needed.
+    """
+
+    num_groups: jnp.ndarray       # [] traced — real centroid rows (incl. 0)
+    num_candidates: jnp.ndarray   # [] traced — real T for this shard
+    num_partitions: jnp.ndarray   # [] traced — real partition count
+    t_static: int                 # padded candidate width (top_k size)
+    p_static: int                 # padded partition width (exhaustive plans)
 
 
 class QueryPlan(NamedTuple):
@@ -97,13 +130,27 @@ def candidates_scanned(plan: QueryPlan, store: PartitionStore) -> jnp.ndarray:
     return jnp.sum(jnp.where(_first_occurrence_mask(sp), cnt, 0), axis=-1)
 
 
-def _candidates(index: ClimberIndex, p4_rank_q: jnp.ndarray):
-    """Top-T candidate groups by the (OD, WD) ladder + their trie descent."""
+def _candidates(index: ClimberIndex, p4_rank_q: jnp.ndarray,
+                ctx: Optional[ShardPlanContext] = None):
+    """Top-T candidate groups by the (OD, WD) ladder + their trie descent.
+
+    With ``ctx`` (device path over a padded skeleton) the centroid columns
+    beyond the shard's real group count are masked to ``_BIG`` before the
+    top-k, and candidate slots beyond the real T are masked afterwards —
+    ``jax.lax.top_k``'s lowest-index tie-break then makes the first
+    ``ctx.num_candidates`` picks identical to the host planner's (padding
+    columns tie with the column-0 fallback but lose on index), so every
+    downstream arg-reduction sees the host values where it matters.
+    """
     cfg = index.cfg
-    t = _num_candidates(index)
+    t = ctx.t_static if ctx is not None else _num_candidates(index)
     od, wd = assignment.assignment_distances(
         p4_rank_q, index.centroid_onehot, cfg.num_pivots,
         decay=cfg.decay, decay_lambda=cfg.decay_lambda)
+    if ctx is not None:
+        pad_col = jnp.arange(od.shape[-1]) >= ctx.num_groups   # [G_pad]
+        od = jnp.where(pad_col[None, :], _BIG, od)
+        wd = jnp.where(pad_col[None, :], _BIG, wd)
     # lexicographic (od, wd): od is integral in [0, m]; wd bounded by TW < m+1.
     score = od * (cfg.prefix_len + 2.0) + wd
     neg, grp = jax.lax.top_k(-score, t)                        # [Q, T]
@@ -113,6 +160,11 @@ def _candidates(index: ClimberIndex, p4_rank_q: jnp.ndarray):
     node, pathlen, parent = descend(
         index.trie, p4_rank_q[:, None, :].repeat(t, axis=1), grp)
     size = index.trie.node_size[node]
+    if ctx is not None:
+        valid = jnp.arange(t) < ctx.num_candidates             # [T]
+        cand_od = jnp.where(valid[None, :], cand_od, _BIG)
+        cand_wd = jnp.where(valid[None, :], cand_wd, _BIG)
+        size = jnp.where(valid[None, :], size, 0.0)
     return grp, cand_od, cand_wd, node, pathlen, parent, size
 
 
@@ -140,10 +192,12 @@ def _node_targets(index: ClimberIndex, nodes: jnp.ndarray):
     return parts, lo.astype(jnp.int32), hi.astype(jnp.int32)
 
 
-def plan_knn(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
+def plan_knn(index: ClimberIndex, p4_rank_q: jnp.ndarray,
+             ctx: Optional[ShardPlanContext] = None) -> QueryPlan:
     """CLIMBER-kNN (Algorithm 3)."""
     cfg = index.cfg
-    grp, od, wd, node, pathlen, parent, size = _candidates(index, p4_rank_q)
+    grp, od, wd, node, pathlen, parent, size = \
+        _candidates(index, p4_rank_q, ctx)
     best = _rank_best(od, wd, pathlen, size, cfg.prefix_len)    # [Q]
     q = p4_rank_q.shape[0]
     rows = jnp.arange(q)
@@ -153,10 +207,12 @@ def plan_knn(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
                      node=node_star, pathlen=pathlen[rows, best])
 
 
-def plan_adaptive(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
+def plan_adaptive(index: ClimberIndex, p4_rank_q: jnp.ndarray,
+                  ctx: Optional[ShardPlanContext] = None) -> QueryPlan:
     """CLIMBER-kNN-Adaptive (paper §VI)."""
     cfg = index.cfg
-    grp, od, wd, node, pathlen, parent, size = _candidates(index, p4_rank_q)
+    grp, od, wd, node, pathlen, parent, size = \
+        _candidates(index, p4_rank_q, ctx)
     best = _rank_best(od, wd, pathlen, size, cfg.prefix_len)
     q, t = grp.shape
     rows = jnp.arange(q)
@@ -190,6 +246,16 @@ def plan_adaptive(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
     first_occurrence = jnp.take_along_axis(
         dup, jnp.arange(2 * t)[None, :, None], axis=-1)[..., 0] == 1
     ent_size = jnp.where(first_occurrence, ent_size, 0.0)
+    if ctx is not None:
+        # device path: padded candidate slots can land on the *real*
+        # fallback group 0 (top_k fills the tail with the _BIG-tied
+        # columns, lowest index first) — the host planner never memorises
+        # them, so they must not be expandable or count toward coverage
+        ent_valid = jnp.broadcast_to(
+            jnp.repeat(jnp.arange(t) < ctx.num_candidates, 2)[None, :],
+            ent_node.shape)
+        ent_valid = jnp.take_along_axis(ent_valid, order, axis=-1)
+        ent_size = jnp.where(ent_valid, ent_size, 0.0)
 
     # Expansion rule (§VI): the adaptive algorithm memorises (a) all groups
     # tied at the smallest OD distance and (b) per group the longest/2nd-
@@ -202,6 +268,8 @@ def plan_adaptive(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
     cum_before = jnp.cumsum(ent_size, axis=-1) - ent_size
     need = cum_before < float(cfg.k)
     selected = first_occurrence & (need | od_tied)
+    if ctx is not None:
+        selected = selected & ent_valid
     selected = selected.at[:, 0].set(True)
 
     # Partition cap: adaptive_factor × the partitions CLIMBER-kNN touches.
@@ -238,7 +306,8 @@ def exhaustive_selection(num_partitions: int, q: int):
     return parts, lo, hi
 
 
-def plan_exhaustive(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
+def plan_exhaustive(index: ClimberIndex, p4_rank_q: jnp.ndarray,
+                    ctx: Optional[ShardPlanContext] = None) -> QueryPlan:
     """Lossless fallback: scan every partition of every group (exact kNN).
 
     Selects all P partitions with a DFS interval covering every node, so the
@@ -248,16 +317,22 @@ def plan_exhaustive(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
     never the serving default (it reads everything).
     """
     q = p4_rank_q.shape[0]
-    parts, lo, hi = exhaustive_selection(index.store.num_partitions, q)
+    if ctx is not None:
+        parts, lo, hi = exhaustive_selection(ctx.p_static, q)
+        parts = jnp.where(parts < ctx.num_partitions, parts, -1)
+    else:
+        parts, lo, hi = exhaustive_selection(index.store.num_partitions, q)
     zero = jnp.zeros((q,), jnp.int32)
     return QueryPlan(sel_part=parts, sel_lo=lo, sel_hi=hi,
                      node=zero, pathlen=zero)
 
 
-def plan_od_smallest(index: ClimberIndex, p4_rank_q: jnp.ndarray) -> QueryPlan:
+def plan_od_smallest(index: ClimberIndex, p4_rank_q: jnp.ndarray,
+                     ctx: Optional[ShardPlanContext] = None) -> QueryPlan:
     """OD-Smallest ablation (§VII-C): all partitions of all min-OD groups."""
     cfg = index.cfg
-    grp, od, wd, node, pathlen, parent, size = _candidates(index, p4_rank_q)
+    grp, od, wd, node, pathlen, parent, size = \
+        _candidates(index, p4_rank_q, ctx)
     min_od = jnp.min(od, axis=-1, keepdims=True)
     sel_grp = od <= min_od + 0.5                                # [Q, T]
     roots = index.trie.group_root[grp]                          # [Q, T]
@@ -327,6 +402,45 @@ register_planner("knn", plan_knn)
 register_planner("adaptive", plan_adaptive)
 register_planner("od_smallest", plan_od_smallest)
 register_planner("exhaustive", plan_exhaustive)
+
+
+# -- device variants ----------------------------------------------------
+# A device planner has the same signature plus a mandatory
+# ShardPlanContext: ``(index_view, p4_rank_q, ctx) -> QueryPlan``.  It must
+# be traceable against a *padded* skeleton (static shapes = fleet maxima,
+# real counts in ctx) and produce the host planner's live entries in the
+# same order — that is what lets the fleet's fused mesh pass
+# (``repro.fleet.device_plan`` / ``MeshFleetPlacement.query``) stay
+# bit-identical to the host-loop oracle.  User-registered host planners
+# without a device variant simply fall back to host planning under mesh
+# placement.
+DevicePlanner = Callable[..., QueryPlan]
+
+_DEVICE_PLANNERS: Dict[str, DevicePlanner] = {}
+
+
+def register_device_planner(name: str, fn: Optional[DevicePlanner] = None):
+    """Register the device (padded-skeleton) variant of planner ``name``."""
+    if fn is None:
+        return partial(register_device_planner, name)
+    _DEVICE_PLANNERS[name] = fn
+    return fn
+
+
+def get_device_planner(name: str) -> Optional[DevicePlanner]:
+    """Device variant of ``name``, or None (→ host-planning fallback)."""
+    return _DEVICE_PLANNERS.get(name)
+
+
+def device_planner_names() -> Tuple[str, ...]:
+    return tuple(sorted(_DEVICE_PLANNERS))
+
+
+# the four built-ins are ctx-aware host planners: same function, both paths
+register_device_planner("knn", plan_knn)
+register_device_planner("adaptive", plan_adaptive)
+register_device_planner("od_smallest", plan_od_smallest)
+register_device_planner("exhaustive", plan_exhaustive)
 
 
 def default_slot_budget(index: ClimberIndex,

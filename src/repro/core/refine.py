@@ -157,10 +157,12 @@ def refine(store: PartitionStore, queries: jnp.ndarray, sel_part: jnp.ndarray,
     """
     if resolve_use_kernel(use_kernel):
         from repro.kernels import ops as kernel_ops
-        sp, lo, hi = _sort_by_partition(sel_part, sel_lo, sel_hi)
-        d2, gid = kernel_ops.fused_refine_topk(
+        # the device-plan variant owns the partition sort the kernel's
+        # scalar-prefetch grid requires, so plans coming straight off a
+        # device planner (fleet fused pass) and host-built plans share it
+        d2, gid = kernel_ops.fused_refine_topk_device_plan(
             store.data, store.norms, store.rec_dfs, store.rec_gid,
-            queries, sp, lo, hi, k)
+            queries, sel_part, sel_lo, sel_hi, k)
         # under-k slots keep the +inf/-1 accumulator init → PAD_DIST/-1,
         # the same sentinel convention as the dense branch below
         return jnp.sqrt(d2), jnp.where(d2 >= _INF, -1, gid)

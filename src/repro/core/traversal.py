@@ -58,6 +58,58 @@ class TrieDevice(NamedTuple):
         )
 
 
+def pad_trie(trie: TrieDevice, *, num_nodes: int, num_edges: int,
+             max_parts: int, num_groups: int) -> TrieDevice:
+    """Pad a skeleton to static dims with *inert* entries.
+
+    The fleet's stacked-trie planner (``repro.fleet.device_plan``) stacks
+    ragged per-shard skeletons into one ``[S, ...]`` table set, so every
+    shard must first be padded to the fleet-wide maxima in a way that can
+    never change a descent or a plan:
+
+      * edge keys pad with int32 max — a real key is ``node * r + pivot``
+        with ``node * r < 2**31`` (asserted at build), so no probe ever
+        matches a pad edge and ``searchsorted`` still sees a sorted table;
+      * the node axis pads with inert nodes (no children, size 0, empty
+        DFS interval ``[0, 0)``, no partitions) — ``num_nodes`` must exceed
+        the real node count so index ``num_nodes - 1`` is guaranteed inert;
+      * pad groups root at that inert node and default to partition ``-1``,
+        so a descent from a pad group lands nowhere and plans nothing.
+
+    Returns the padded TrieDevice (num_pivots/num_partitions unchanged).
+    """
+    n = int(trie.has_children.shape[0])
+    e = int(trie.edge_key.shape[0])
+    g = int(trie.group_root.shape[0])
+    p = int(trie.part_ids_pad.shape[1])
+    if num_nodes <= n:
+        raise ValueError(f"num_nodes={num_nodes} must exceed the real node "
+                         f"count {n} (the last index must be inert)")
+    if num_edges < e or num_groups < g or max_parts < p:
+        raise ValueError("pad_trie cannot shrink a skeleton")
+    dn, de, dg = num_nodes - n, num_edges - e, num_groups - g
+    inert = num_nodes - 1
+    pad1 = lambda x, w, cv: jnp.pad(x, ((0, w),), constant_values=cv)
+    part_ids = jnp.pad(trie.part_ids_pad,
+                       ((0, dn), (0, max_parts - p)), constant_values=-1)
+    return TrieDevice(
+        edge_key=pad1(trie.edge_key, de, jnp.iinfo(jnp.int32).max),
+        edge_child=pad1(trie.edge_child, de, 0),
+        has_children=pad1(trie.has_children, dn, False),
+        node_size=pad1(trie.node_size, dn, 0.0),
+        node_depth=pad1(trie.node_depth, dn, 0),
+        dfs_in=pad1(trie.dfs_in, dn, 0),
+        dfs_out=pad1(trie.dfs_out, dn, 0),
+        part_start=pad1(trie.part_start, dn,
+                        int(trie.part_start[-1])),
+        part_ids_pad=part_ids,
+        group_root=pad1(trie.group_root, dg, inert),
+        group_default_part=pad1(trie.group_default_part, dg, -1),
+        num_pivots=trie.num_pivots,
+        num_partitions=trie.num_partitions,
+    )
+
+
 def descend(trie: TrieDevice, p4_rank: jnp.ndarray,
             group: jnp.ndarray):
     """Walk each signature down its group's trie as far as possible.

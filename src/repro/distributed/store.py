@@ -31,6 +31,10 @@ The same helpers serve two layouts:
     ``pad_store``/``store_pspecs``/``shard_store`` apply verbatim to the
     shard axis — each device then owns whole indexes, which is how the
     fleet's mesh placement (``repro.fleet.placement``) lays a fleet out.
+    The trie skeletons ride the same layout through the sibling helper
+    :func:`repro.fleet.device_plan.stack_tries` (``[S, ...]`` padded trie
+    tables next to the ``[S, ...]`` stacked stores), which is what lets the
+    placement plan on device instead of looping shards on the host.
 """
 from __future__ import annotations
 

@@ -83,6 +83,10 @@ class FleetEngine(BatchedServingLoop):
             variant=self.variant, use_kernel=self.use_kernel,
             fanout=self.fanout, placement=self.placement)
         dt = time.perf_counter() - t0
+        # surface the fleet's device-plan cache traffic (mesh placement)
+        # through the same EngineStats counters the single-index engine uses
+        self.stats.plan_cache_hits += info.plan_cache_hits
+        self.stats.plan_cache_misses += info.plan_cache_misses
         bs = self.batch_size
         d = np.full((bs, self.k), PAD_DIST, np.float32)
         g = np.full((bs, self.k), -1, np.int32)

@@ -30,13 +30,21 @@ Placement — where the sealed shards execute:
 
   * ``placement="host"`` — the lossless oracle: a host loop dispatches each
     sealed shard's ``knn_query`` sequentially and fuses on the host;
-  * ``placement="mesh"`` — the sealed stores live stacked on the device
-    mesh (:class:`repro.fleet.placement.MeshFleetPlacement`) and one
-    ``shard_map`` fans the whole batch out: per-device refine over each
-    resident shard, one ``all_gather`` + in-order ``merge_topk`` fold.
-    Bit-identical to the host loop (same plans, same refine arithmetic,
-    same merge order); the delta is always queried host-side and merged
-    last on both paths.
+  * ``placement="mesh"`` — the sealed stores *and* trie skeletons live
+    stacked on the device mesh
+    (:class:`repro.fleet.placement.MeshFleetPlacement`) and one
+    ``shard_map`` runs the whole query — featurize → trie descent → plan →
+    refine → in-order ``merge_topk`` fold — as a single device program
+    (planner variants without a registered device twin fall back to host
+    planning + the refine-only fan-out).  Bit-identical to the host loop
+    (the device planner reproduces the host plans entry-for-entry, same
+    refine arithmetic, same merge order); the delta is always queried
+    host-side and merged last on both paths.  Device plans are memoized
+    per query in an LRU (:class:`repro.serve.knn_engine.PlanCache`) keyed
+    on (placement epoch, planner variant, query bytes); the epoch
+    increments whenever the sealed shard set or mesh changes
+    (``add_shard`` / seal / merge / retire / ``attach_mesh``), so a hit
+    can never replay a plan row from a retired layout.
 
 ``mesh=`` at construction (or :meth:`IndexFleet.attach_mesh`) enables the
 mesh path and makes it the default; without a mesh the default stays
@@ -86,6 +94,7 @@ from repro.core.query import (candidates_scanned, exhaustive_selection,
 from repro.core.refine import PAD_DIST, dispatch_refine, merge_topk, refine
 from repro.distributed.store import concat_stores
 from repro.fleet.router import SignatureRouter
+from repro.serve.knn_engine import PlanCache
 from repro.utils.config import ClimberConfig
 
 
@@ -102,6 +111,8 @@ class FleetConfig:
     auto_compact: bool = True       # seal automatically at delta_capacity
     background_compaction: bool = False  # auto-compaction returns before the
                                          # rebuild finishes (ticket-based)
+    plan_cache_size: int = 256      # LRU capacity of the per-query device
+                                    # plan cache (mesh placement; 0 = off)
     seed: int = 0
 
 
@@ -184,6 +195,15 @@ class FleetQueryInfo:
     lifecycle: Optional[dict] = None  # FleetStats.lifecycle_snapshot() at
                                       # query time (compaction_ms, wal_bytes,
                                       # merges, retired_shards)
+    stage_ms: Optional[dict] = None   # wall-ms per stage of this call:
+                                      # plan_ms (host planning / plan-cache
+                                      # work), refine_ms (sealed-shard
+                                      # execution — on the fused mesh path
+                                      # this is the whole device program,
+                                      # planning included), merge_ms
+                                      # (host-side merge folds + delta)
+    plan_cache_hits: int = 0          # per-query device-plan cache hits of
+    plan_cache_misses: int = 0        # this call (mesh placement only)
 
 
 class DeltaShard:
@@ -369,6 +389,8 @@ class IndexFleet:
         self.mesh = mesh
         self.data_axis = data_axis
         self._placement = None          # lazily built MeshFleetPlacement
+        self._placement_epoch = 0       # bumps with every sealed-set change
+        self._plan_cache = PlanCache(cfg.plan_cache_size)
         self.merge_policy = None        # default MergePolicy for maintenance
         # -- lifecycle state (repro.fleet.lifecycle) ----------------------
         self._lock = threading.RLock()
@@ -395,7 +417,20 @@ class IndexFleet:
         with self._lock:
             self.mesh = mesh
             self.data_axis = data_axis
-            self._placement = None
+            self._invalidate_placement()
+
+    def _invalidate_placement(self) -> None:
+        """Drop the lazy mesh layout and advance the placement epoch.
+
+        Called (under the fleet lock) whenever the sealed shard set or the
+        mesh changes — ``add_shard``, seal, lifecycle merge/retire,
+        ``attach_mesh``.  The epoch bump also orphans every device-plan
+        cache entry keyed on the old layout: plan rows are ``[S_pad, ...]``
+        stacks in shard-slot order, so replaying one across a layout change
+        would refine against the wrong shards.
+        """
+        self._placement = None
+        self._placement_epoch += 1
 
     def _resolve_placement(self, placement: Optional[str]) -> str:
         """``None`` → ``"mesh"`` when a mesh is attached, else ``"host"``."""
@@ -623,7 +658,7 @@ class IndexFleet:
             self._ensure_router(data)
             self.shards.append(handle)
             self.router.register(key, self.router.summarize(data))
-            self._placement = None      # sealed set changed: re-lay out
+            self._invalidate_placement()    # sealed set changed: re-lay out
             self._persist_shard(handle)
         return handle
 
@@ -781,7 +816,7 @@ class IndexFleet:
             self._ensure_router(frozen.data)
             self.router.register(handle.key,
                                  self.router.summarize(frozen.data))
-            self._placement = None
+            self._invalidate_placement()
             if storage is not None:
                 from repro.fleet.lifecycle.snapshot import write_manifest
                 self._shard_dirs[handle.key] = slug
@@ -865,17 +900,27 @@ class IndexFleet:
                            mask: np.ndarray, variant: str,
                            use_kernel: Optional[bool],
                            best_d: np.ndarray, best_g: np.ndarray,
-                           touched: np.ndarray, scanned: np.ndarray) -> None:
-        """The host-loop oracle: one ``knn_query`` dispatch per sealed
-        shard, fused on the host in shard order (accumulators in place)."""
+                           touched: np.ndarray, scanned: np.ndarray,
+                           stage: dict) -> None:
+        """The host-loop oracle: one featurize→plan→refine dispatch per
+        sealed shard (the arithmetic of ``knn_query``, staged so the
+        per-stage timers see plan vs refine vs merge), fused on the host
+        in shard order (accumulators in place)."""
         for si, shard in enumerate(shards):
             qsel = np.nonzero(mask[:, si])[0]
             if not len(qsel):
                 continue
-            dist, gid, qp = knn_query(shard.index,
-                                      jnp.asarray(queries[qsel]), k,
-                                      variant=variant, use_kernel=use_kernel)
+            qj = jnp.asarray(queries[qsel])
+            t0 = time.perf_counter()
+            p4r, _ = shard.index.featurize(qj)
+            qp = plan(shard.index, p4r, variant=variant)
+            jax.block_until_ready(qp.sel_part)
+            t1 = time.perf_counter()
+            dist, gid = dispatch_refine(shard.index.store, qj,
+                                        qp.sel_part, qp.sel_lo, qp.sel_hi,
+                                        k, use_kernel=use_kernel)
             dist, gid = np.asarray(dist), np.asarray(gid)
+            t2 = time.perf_counter()
             gg = np.where(gid >= 0,
                           shard.global_ids[np.maximum(gid, 0)],
                           -1).astype(np.int32)
@@ -884,6 +929,10 @@ class IndexFleet:
                                 jnp.asarray(dist), jnp.asarray(gg), k)
             best_d[qsel] = np.asarray(md)
             best_g[qsel] = np.asarray(mg)
+            t3 = time.perf_counter()
+            stage["plan_ms"] += (t1 - t0) * 1e3
+            stage["refine_ms"] += (t2 - t1) * 1e3
+            stage["merge_ms"] += (t3 - t2) * 1e3
             pt = np.asarray(qp.partitions_touched(), np.int64)
             touched[qsel] += pt
             scanned[qsel] += np.asarray(
@@ -894,14 +943,89 @@ class IndexFleet:
                            mask: np.ndarray, variant: str,
                            use_kernel: Optional[bool],
                            best_d: np.ndarray, best_g: np.ndarray,
-                           touched: np.ndarray, scanned: np.ndarray) -> None:
-        """Mesh fan-out: plan per shard on the host (each shard has its own
-        pivots/trie — cheap), stack the plans to ``[S_pad, Q, MP]`` with
-        routing expressed as masked-out rows, and run one shard_map that
-        refines every resident shard per device and folds the answers in
-        shard order.  Bit-identical to :meth:`_query_sealed_host`."""
+                           touched: np.ndarray, scanned: np.ndarray,
+                           stage: dict, epoch: int) -> None:
+        """Mesh fan-out, device-resident planning.
+
+        The default path runs featurize → trie descent → plan → refine →
+        merge as ONE device program (``MeshFleetPlacement.query``) with
+        routing applied as a device-side plan mask; per-query plan rows
+        come back and are memoized in the fleet's :class:`PlanCache` under
+        ``(placement epoch, variant, query bytes)``.  When every query of
+        a batch hits, the plans are assembled on the host and only the
+        refine fan-out (``pl.dispatch``) runs.  Planner variants without a
+        registered device twin fall back to host planning + refine-only
+        dispatch.  All paths are bit-identical to
+        :meth:`_query_sealed_host`."""
+        if not pl.supports_device_planning(variant):
+            self._query_sealed_mesh_hostplan(
+                shards, pl, queries, k, mask, variant, use_kernel,
+                best_d, best_g, touched, scanned, stage)
+            return
+        qn = len(queries)
+        routed_t = np.zeros((pl.num_slots, qn), dtype=bool)
+        routed_t[: len(shards)] = mask.T
+        cache = self._plan_cache
+        t0 = time.perf_counter()
+        keys = [(epoch, variant, queries[i].tobytes()) for i in range(qn)]
+        rows = [cache.get(kk) for kk in keys]
+        if qn and all(r is not None for r in rows):
+            b = rows[0][0].shape[-1]
+            sp = np.empty((pl.num_slots, qn, b), np.int32)
+            lo = np.empty((pl.num_slots, qn, b), np.int32)
+            hi = np.empty((pl.num_slots, qn, b), np.int32)
+            pt_all = np.empty((pl.num_slots, qn), np.int64)
+            sc_all = np.empty((pl.num_slots, qn), np.int64)
+            for i, r in enumerate(rows):
+                sp[:, i], lo[:, i], hi[:, i], pt_all[:, i], sc_all[:, i] = r
+            spm = np.where(routed_t[:, :, None], sp, -1)
+            t1 = time.perf_counter()
+            stage["plan_ms"] += (t1 - t0) * 1e3
+            dist, gid = pl.dispatch(queries, spm, lo, hi, k,
+                                    use_kernel=use_kernel)
+            stage["refine_ms"] += (time.perf_counter() - t1) * 1e3
+        else:
+            t1 = time.perf_counter()
+            stage["plan_ms"] += (t1 - t0) * 1e3
+            dist, gid, sp, lo, hi, pt_all, sc_all = pl.query(
+                queries, routed_t, k, variant=variant, use_kernel=use_kernel)
+            t2 = time.perf_counter()
+            # the fused pass plans on device, inseparably from refine
+            stage["refine_ms"] += (t2 - t1) * 1e3
+            for i, kk in enumerate(keys):
+                cache.put(kk, (sp[:, i], lo[:, i], hi[:, i],
+                               pt_all[:, i].astype(np.int64),
+                               sc_all[:, i].astype(np.int64)))
+            pt_all = pt_all.astype(np.int64)
+            sc_all = sc_all.astype(np.int64)
+            stage["plan_ms"] += (time.perf_counter() - t2) * 1e3
+        best_d[:], best_g[:] = dist, gid
+        for si, shard in enumerate(shards):
+            routed = mask[:, si]
+            if not routed.any():        # host loop never executes it either
+                continue
+            touched += np.where(routed, pt_all[si], 0)
+            scanned += np.where(routed, sc_all[si], 0)
+            self.stats.observe_shard(shard.key, int(routed.sum()),
+                                     int(pt_all[si][routed].sum()))
+
+    def _query_sealed_mesh_hostplan(self, shards, pl, queries: np.ndarray,
+                                    k: int, mask: np.ndarray, variant: str,
+                                    use_kernel: Optional[bool],
+                                    best_d: np.ndarray, best_g: np.ndarray,
+                                    touched: np.ndarray,
+                                    scanned: np.ndarray,
+                                    stage: dict) -> None:
+        """Host-planned mesh fallback: plan per shard on the host (each
+        shard has its own pivots/trie — cheap), stack the plans to
+        ``[S_pad, Q, MP]`` with routing expressed as masked-out rows, and
+        run one shard_map that refines every resident shard per device and
+        folds the answers in shard order.  Used for planner variants with
+        no registered device twin; never cached (plan widths are
+        batch-dependent here)."""
         qn = len(queries)
         qj = jnp.asarray(queries)
+        t0 = time.perf_counter()
         plans = []
         for si, shard in enumerate(shards):
             if not mask[:, si].any():   # host loop skips unrouted shards:
@@ -933,8 +1057,11 @@ class IndexFleet:
                            np.int64), 0)
             self.stats.observe_shard(shard.key, int(routed.sum()),
                                      int(pt[routed].sum()))
+        t1 = time.perf_counter()
+        stage["plan_ms"] += (t1 - t0) * 1e3
         dist, gid = pl.dispatch(queries, sp, lo, hi, k,
                                 use_kernel=use_kernel)
+        stage["refine_ms"] += (time.perf_counter() - t1) * 1e3
         best_d[:], best_g[:] = dist, gid
 
     def _merge_delta_answer(self, delta: DeltaShard, queries: np.ndarray,
@@ -1008,6 +1135,7 @@ class IndexFleet:
         best_g = np.full((qn, k), -1, np.int32)
         touched = np.zeros(qn, np.int64)
         scanned = np.zeros(qn, np.int64)
+        stage = {"plan_ms": 0.0, "refine_ms": 0.0, "merge_ms": 0.0}
 
         # consistent view: shard list + both deltas are captured under the
         # lock; the (slow) sealed-shard execution then runs off-lock.  The
@@ -1020,6 +1148,9 @@ class IndexFleet:
             s = len(shards)
             pl = self._ensure_placement() \
                 if placement == "mesh" and s else None
+            epoch = self._placement_epoch
+            cache = self._plan_cache
+            h0, m0 = cache.hits, cache.misses
             lifecycle = self.stats.lifecycle_snapshot()
             # mask under the same lock: the router registry is only ever
             # resized (seal/merge/retire) while it is held, so the mask
@@ -1034,12 +1165,13 @@ class IndexFleet:
             if placement == "mesh":
                 self._query_sealed_mesh(shards, pl, queries, k, mask,
                                         variant, use_kernel, best_d, best_g,
-                                        touched, scanned)
+                                        touched, scanned, stage, epoch)
             else:
                 self._query_sealed_host(shards, queries, k, mask, variant,
                                         use_kernel, best_d, best_g,
-                                        touched, scanned)
+                                        touched, scanned, stage)
 
+        td = time.perf_counter()
         if sealing is not None:       # frozen mid-compaction: immutable
             best_d, best_g = self._merge_delta_answer(
                 sealing, queries, k, variant, use_kernel,
@@ -1051,9 +1183,12 @@ class IndexFleet:
             self.stats.queries += qn
             self.stats.routed_pairs += int(mask.sum())
             self.stats.exhaustive_pairs += qn * s
+        stage["merge_ms"] += (time.perf_counter() - td) * 1e3
         return best_d, best_g, FleetQueryInfo(
             partitions_touched=touched, candidates_scanned=scanned,
-            routed_mask=mask, lifecycle=lifecycle)
+            routed_mask=mask, lifecycle=lifecycle, stage_ms=stage,
+            plan_cache_hits=cache.hits - h0,
+            plan_cache_misses=cache.misses - m0)
 
     def scan_exact(self, queries: np.ndarray, k: int = 0, *,
                    use_kernel: Optional[bool] = None, mesh=None

@@ -79,7 +79,7 @@ def _retire(fleet, policy: MergePolicy, now: float) -> List[str]:
         if fleet.router is not None:
             fleet.router.replace_span(si, 1)
     fleet.shards = [fleet.shards[i] for i in keep]
-    fleet._placement = None
+    fleet._invalidate_placement()
     fleet.stats.retired_shards += len(retired)
     if fleet.storage_dir is not None:
         import shutil
@@ -136,7 +136,7 @@ def _merge_pair(fleet, i: int) -> Optional[str]:
         if fleet.router is not None:
             fleet.router.replace_span(i, 2, key,
                                       fleet.router.summarize(data))
-        fleet._placement = None
+        fleet._invalidate_placement()
         fleet.stats.merges += 1
         if fleet.storage_dir is not None:
             import shutil

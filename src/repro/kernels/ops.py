@@ -57,6 +57,26 @@ def fused_refine_topk(data, norms, rec_dfs, rec_gid, queries,
                            interpret=_interpret(), **kw)
 
 
+def fused_refine_topk_device_plan(data, norms, rec_dfs, rec_gid, queries,
+                                  sel_part, sel_lo, sel_hi, k: int, **kw):
+    """:func:`fused_refine_topk` over a plan that is already device-resident
+    but not yet partition-sorted — e.g. straight out of a device planner in
+    the same program (the fleet's fused mesh pass).
+
+    The partition sort the scalar-prefetch grid requires happens here as a
+    traced stable argsort (pads-first, ties by entry slot), so the plan
+    never round-trips to the host between planning and refine.  With an
+    already-sorted plan the sort is the identity permutation — calling this
+    instead of :func:`fused_refine_topk` is always safe, just one argsort
+    heavier.
+    """
+    order = jnp.argsort(sel_part, axis=-1, stable=True)
+    take = lambda t: jnp.take_along_axis(t, order, axis=-1)
+    return _rt.refine_topk(data, norms, rec_dfs, rec_gid, queries,
+                           take(sel_part), take(sel_lo), take(sel_hi), k,
+                           interpret=_interpret(), **kw)
+
+
 def paa(x: jnp.ndarray, segments: int, **kw) -> jnp.ndarray:
     """PAA mean-pool ``[B, n]`` → ``[B, w]`` (see kernels/paa_kernel.py)."""
     return _paa_k.paa(x, segments, interpret=_interpret(), **kw)

@@ -16,13 +16,17 @@ arg-reductions only), so a query's (dist, gid) is bit-identical whichever
 batch it rides in — ``run`` on a big batch equals per-query ``knn_query``.
 
 Query plan cache: a plan depends only on the query's P4→ rank signature
-(and the frozen index), so the engine memoizes compacted plan rows in an
-LRU keyed on the signature prefix.  The pipeline is staged as three jits —
-featurize → plan → refine — and a tick whose live rows all hit the cache
-skips the planning stage (assignment-distance matmuls + trie descent)
-entirely; any miss re-plans the whole fixed-shape batch and refreshes every
-row's cache entry.  Cached rows are exactly a prior plan stage's output, so
-caching never changes results.  ``EngineStats`` counts per-row hits/misses.
+(and the frozen index), so the engine memoizes compacted plan rows in a
+:class:`PlanCache` LRU keyed on the signature prefix.  The pipeline is
+staged as three jits — featurize → plan → refine — and a tick whose live
+rows all hit the cache skips the planning stage (assignment-distance
+matmuls + trie descent) entirely; any miss re-plans the whole fixed-shape
+batch and refreshes every row's cache entry.  Cached rows are exactly a
+prior plan stage's output, so caching never changes results.
+``EngineStats`` counts per-row hits/misses.  The fleet reuses the same
+:class:`PlanCache` for its device plans, prefixing every key with a
+*placement epoch* that increments when the sealed shard set changes — the
+single-index engine's index is frozen, so its epoch is implicitly 0.
 
 The admission machinery (request queue, fixed-shape ticks, per-query
 metrics) lives in :class:`BatchedServingLoop` so other executors — e.g. the
@@ -47,6 +51,54 @@ from repro.core.index import ClimberIndex
 from repro.core.query import candidates_scanned, default_slot_budget, \
     get_planner, plan as plan_queries
 from repro.core.refine import dispatch_refine, resolve_use_kernel
+
+
+class PlanCache:
+    """Epoch-aware LRU of per-query plan rows.
+
+    Keys are arbitrary hashables: :class:`ClimberEngine` keys rows on the
+    query's rank-signature bytes (its index is frozen — epoch implicitly
+    0); the fleet (``repro.fleet``) keys on ``(placement epoch, planner
+    variant, raw query bytes)``, so bumping the epoch orphans every entry
+    planned against a retired shard layout without an explicit flush —
+    stale entries simply age out of the LRU.  ``hits`` / ``misses`` are
+    lifetime counters; callers diff them around a lookup burst to
+    attribute per-call stats.
+    """
+
+    __slots__ = ("size", "hits", "misses", "_rows")
+
+    def __init__(self, size: int):
+        self.size = int(size)
+        self.hits = 0
+        self.misses = 0
+        self._rows: OrderedDict = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def get(self, key):
+        """The cached row (refreshing LRU order) or None; counts the
+        lookup as a hit or a miss."""
+        row = self._rows.get(key)
+        if row is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._rows.move_to_end(key)
+        return row
+
+    def put(self, key, row) -> None:
+        """Insert or refresh a row, evicting LRU entries over capacity."""
+        if self.size <= 0:
+            return
+        self._rows[key] = row
+        self._rows.move_to_end(key)
+        while len(self._rows) > self.size:
+            self._rows.popitem(last=False)
+
+    def clear(self) -> None:
+        self._rows.clear()
 
 
 @dataclasses.dataclass
@@ -291,7 +343,7 @@ class ClimberEngine(BatchedServingLoop):
 
         self.plan_cache_size = plan_cache_size
         # signature bytes → (sel_part, sel_lo, sel_hi, touched, scanned) rows
-        self._plan_cache: "OrderedDict[bytes, tuple]" = OrderedDict()
+        self._plan_cache = PlanCache(plan_cache_size)
 
         self._featurize = jax.jit(lambda q: self.index.featurize(q)[0])
         self._plan = jax.jit(self._plan_fn)
@@ -319,15 +371,14 @@ class ClimberEngine(BatchedServingLoop):
         """
         if not self.plan_cache_size:
             return self._plan(p4r)
+        cache = self._plan_cache
         p4_host = np.asarray(p4r)            # one transfer for all rows
         keys = [p4_host[i].tobytes() for i in range(nlive)]
-        rows = [self._plan_cache.get(kk) for kk in keys]
-        hits = sum(r is not None for r in rows)
-        self.stats.plan_cache_hits += hits
-        self.stats.plan_cache_misses += nlive - hits
-        if hits == nlive and nlive:
-            for kk in keys:
-                self._plan_cache.move_to_end(kk)
+        h0, m0 = cache.hits, cache.misses
+        rows = [cache.get(kk) for kk in keys]
+        self.stats.plan_cache_hits += cache.hits - h0
+        self.stats.plan_cache_misses += cache.misses - m0
+        if nlive and all(r is not None for r in rows):
             bs = self.batch_size
             mp = rows[0][0].shape[-1]
             sel_part = np.full((bs, mp), -1, np.int32)
@@ -342,11 +393,7 @@ class ClimberEngine(BatchedServingLoop):
         out = self._plan(p4r)
         sp, lo, hi, touched, scanned = (np.asarray(x) for x in out)
         for i, kk in enumerate(keys):
-            self._plan_cache[kk] = (sp[i], lo[i], hi[i],
-                                    touched[i], scanned[i])
-            self._plan_cache.move_to_end(kk)
-        while len(self._plan_cache) > self.plan_cache_size:
-            self._plan_cache.popitem(last=False)
+            cache.put(kk, (sp[i], lo[i], hi[i], touched[i], scanned[i]))
         return out
 
     def _execute(self, qbatch: np.ndarray, nlive: int):

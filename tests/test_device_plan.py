@@ -1,0 +1,252 @@
+"""Stacked-trie device planning — parity and cache invalidation tests.
+
+The contract under test (``repro.fleet.device_plan`` + the fused mesh
+query pass): stacking ragged per-shard trie skeletons into one padded
+``[S_pad, ...]`` table set changes *nothing* — descent over the stacked
+tables is row-for-row identical to per-shard host descent (including
+edgeless tries, ragged node counts and inert pad shards), device plans
+reproduce the host planner bit-for-bit, and the fleet's epoch-keyed plan
+cache can never replay a plan across a shard-set change.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TrieDevice, build_forest, descend
+from repro.core.query import knn_query
+from repro.core.refine import PAD_DIST, merge_topk
+from repro.data import make_dataset, make_queries
+from repro.fleet import FleetConfig, FleetEngine, IndexFleet
+from repro.fleet.device_plan import descend_stacked, stack_tries, trie_row
+from repro.launch.mesh import make_mesh
+from repro.utils.config import ClimberConfig
+
+K = 10
+
+
+def _random_forest(seed: int, *, rows: int, num_groups: int, m: int, r: int,
+                   capacity: float):
+    """A small random TrieForest plus the signatures/groups that built it."""
+    rng = np.random.default_rng(seed)
+    sigs = np.stack([rng.choice(r, m, replace=False)
+                     for _ in range(rows)]).astype(np.int32)
+    freqs = rng.integers(1, 20, size=rows)
+    groups = rng.integers(0, num_groups, size=rows)
+    forest = build_forest(sigs, freqs, groups, num_groups, r,
+                          capacity=capacity, sample_frac=1.0)
+    return forest, sigs, groups
+
+
+# ----------------------------------------------------------------------
+# stack_tries + descend_stacked ≡ per-shard host descent
+# ----------------------------------------------------------------------
+class TestStackedDescentParity:
+    def test_ragged_shards_match_per_shard_descent(self):
+        # deliberately ragged: different row counts, group counts and
+        # capacities => different node/edge/partition-list shapes per shard
+        m, r = 4, 12
+        specs = [(11, 150, 3, 60.0), (12, 40, 2, 25.0), (13, 260, 4, 90.0)]
+        forests, sig_l, grp_l = [], [], []
+        for seed, rows, g, cap in specs:
+            f, s, gr = _random_forest(seed, rows=rows, num_groups=g,
+                                      m=m, r=r, capacity=cap)
+            forests.append(f)
+            sig_l.append(s)
+            grp_l.append(gr)
+        tries = [TrieDevice.from_forest(f) for f in forests]
+        tables = stack_tries(tries)
+        assert tables.num_slots == 3
+        q = min(len(s) for s in sig_l)
+        p4 = jnp.stack([jnp.asarray(s[:q]) for s in sig_l])
+        grp = jnp.stack([jnp.asarray(g[:q]) for g in grp_l])
+        node_s, plen_s, par_s = descend_stacked(tables, p4, grp,
+                                                num_pivots=r)
+        for j, t in enumerate(tries):
+            node, plen, par = descend(t, p4[j], grp[j])
+            np.testing.assert_array_equal(np.asarray(node_s[j]),
+                                          np.asarray(node))
+            np.testing.assert_array_equal(np.asarray(plen_s[j]),
+                                          np.asarray(plen))
+            np.testing.assert_array_equal(np.asarray(par_s[j]),
+                                          np.asarray(par))
+
+    def test_edgeless_trie_stacks_and_stays_at_root(self):
+        m, r = 4, 12
+        # huge capacity => every entry fits the root, no splits, no edges
+        flat, sigs, grps = _random_forest(3, rows=30, num_groups=2,
+                                          m=m, r=r, capacity=1e9)
+        deep, dsig, dgrp = _random_forest(4, rows=200, num_groups=3,
+                                          m=m, r=r, capacity=40.0)
+        t_flat, t_deep = TrieDevice.from_forest(flat), \
+            TrieDevice.from_forest(deep)
+        assert int(t_flat.edge_key.shape[0]) == 0
+        tables = stack_tries([t_flat, t_deep])
+        q = 30
+        p4 = jnp.stack([jnp.asarray(sigs[:q]), jnp.asarray(dsig[:q])])
+        grp = jnp.stack([jnp.asarray(grps[:q]) % 2,
+                         jnp.asarray(dgrp[:q])])
+        node_s, plen_s, _ = descend_stacked(tables, p4, grp, num_pivots=r)
+        # edgeless shard: everyone stays at its group root, pathlen 0
+        roots = np.asarray(t_flat.group_root)[np.asarray(grp[0])]
+        np.testing.assert_array_equal(np.asarray(node_s[0]), roots)
+        assert not np.asarray(plen_s[0]).any()
+        # the deep shard is untouched by riding next to an edgeless one
+        node, plen, _ = descend(t_deep, p4[1], grp[1])
+        np.testing.assert_array_equal(np.asarray(node_s[1]),
+                                      np.asarray(node))
+        np.testing.assert_array_equal(np.asarray(plen_s[1]),
+                                      np.asarray(plen))
+
+    def test_pad_shards_are_inert(self):
+        m, r = 4, 12
+        f, sigs, grps = _random_forest(5, rows=120, num_groups=3,
+                                       m=m, r=r, capacity=50.0)
+        trie = TrieDevice.from_forest(f)
+        tables = stack_tries([trie] * 3, pad_to=4)   # S=3, S % n_dev != 0
+        assert tables.num_slots == 4
+        # pad-shard bookkeeping: 1 fallback group, 0 partitions
+        np.testing.assert_array_equal(np.asarray(tables.num_groups),
+                                      [3, 3, 3, 1])
+        np.testing.assert_array_equal(np.asarray(tables.num_partitions),
+                                      [f.num_partitions] * 3 + [0])
+        q = 40
+        p4 = jnp.broadcast_to(jnp.asarray(sigs[:q]), (4, q, m))
+        grp = jnp.broadcast_to(jnp.asarray(grps[:q]), (4, q))
+        node_s, plen_s, _ = descend_stacked(tables, p4, grp, num_pivots=r)
+        # pad row: every signature lands on the inert node and matches no
+        # edge; the inert node has no partitions and size 0
+        inert = int(tables.has_children.shape[1]) - 1
+        np.testing.assert_array_equal(np.asarray(node_s[3]),
+                                      np.full(q, inert))
+        assert not np.asarray(plen_s[3]).any()
+        pad_view = trie_row(tables, 3, num_pivots=r)
+        assert not np.asarray(pad_view.has_children[inert])
+        assert float(pad_view.node_size[inert]) == 0.0
+        assert np.all(np.asarray(pad_view.part_ids_pad[inert]) == -1)
+
+    def test_stack_tries_validation(self):
+        m, r = 4, 12
+        f, *_ = _random_forest(6, rows=50, num_groups=2, m=m, r=r,
+                               capacity=30.0)
+        trie = TrieDevice.from_forest(f)
+        with pytest.raises(ValueError):
+            stack_tries([])
+        with pytest.raises(ValueError):
+            stack_tries([trie, trie], pad_to=1)
+        other = trie._replace(num_pivots=r + 1)
+        with pytest.raises(ValueError):
+            stack_tries([trie, other])
+
+
+# ----------------------------------------------------------------------
+# fused mesh pass: masked plan rows + epoch-keyed cache
+# ----------------------------------------------------------------------
+def _small_cfg() -> ClimberConfig:
+    return ClimberConfig(series_len=64, paa_segments=8, num_pivots=32,
+                         prefix_len=5, capacity=128, sample_frac=0.3,
+                         max_centroids=12, k=K, candidate_groups=4,
+                         adaptive_factor=4)
+
+
+@pytest.fixture(scope="module")
+def small_fleet():
+    data = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(0),
+                                   1800, 64))
+    queries = np.asarray(make_queries(jax.random.PRNGKey(2),
+                                      jnp.asarray(data), 5))
+    fleet = IndexFleet(FleetConfig(shard_cfg=_small_cfg(), fanout=2,
+                                   auto_compact=False))
+    for i in range(3):
+        fleet.add_shard(f"t{i}", data[i * 600: (i + 1) * 600])
+    return fleet, data, queries
+
+
+class TestFusedMeshPass:
+    def test_all_masked_plan_rows(self, small_fleet):
+        """Unrouted queries/shards: the device plan masks to -1 rows and
+        the answer is exactly the host merge over the routed pairs."""
+        fleet, data, queries = small_fleet
+        fleet.attach_mesh(make_mesh((1,), ("data",)))
+        try:
+            pl = fleet._ensure_placement()
+            assert pl.supports_device_planning("adaptive")
+            qn = len(queries)
+            routed = np.zeros((pl.num_slots, qn), dtype=bool)
+            routed[0, 1:] = True        # query 0: routed nowhere at all
+            routed[1, 1:] = True        # shard 2: no queries at all
+            d, g, sp, lo, hi, pt, sc = pl.query(queries, routed, K,
+                                                variant="adaptive")
+            # fully-unrouted query: pure PAD row
+            assert np.all(d[0] == np.float32(PAD_DIST))
+            assert np.all(g[0] == -1)
+            # host oracle over the same mask
+            bd = np.full((qn, K), PAD_DIST, np.float32)
+            bg = np.full((qn, K), -1, np.int32)
+            for si in (0, 1):
+                qsel = np.nonzero(routed[si])[0]
+                dist, gid, qp = knn_query(fleet.shards[si].index,
+                                          jnp.asarray(queries[qsel]), K,
+                                          variant="adaptive")
+                gg = np.where(np.asarray(gid) >= 0,
+                              fleet.shards[si].global_ids[
+                                  np.maximum(np.asarray(gid), 0)],
+                              -1).astype(np.int32)
+                md, mg = merge_topk(jnp.asarray(bd[qsel]),
+                                    jnp.asarray(bg[qsel]),
+                                    jnp.asarray(dist), jnp.asarray(gg), K)
+                bd[qsel], bg[qsel] = np.asarray(md), np.asarray(mg)
+                # the unmasked metrics rows reproduce the host plan's
+                np.testing.assert_array_equal(
+                    pt[si][qsel],
+                    np.asarray(qp.partitions_touched(), np.int64))
+            np.testing.assert_array_equal(d, bd)
+            np.testing.assert_array_equal(g, bg)
+        finally:
+            fleet._placement = None
+            fleet.mesh = None
+
+    def test_plan_cache_hits_and_epoch_invalidation(self, small_fleet):
+        fleet, data, queries = small_fleet
+        fleet.attach_mesh(make_mesh((1,), ("data",)))
+        try:
+            d0, g0, i0 = fleet.query(queries, K, placement="mesh")
+            assert i0.plan_cache_misses == len(queries)
+            assert i0.plan_cache_hits == 0
+            d1, g1, i1 = fleet.query(queries, K, placement="mesh")
+            assert i1.plan_cache_hits == len(queries)
+            assert i1.plan_cache_misses == 0
+            np.testing.assert_array_equal(d0, d1)
+            np.testing.assert_array_equal(g0, g1)
+            # shard-set change bumps the epoch: stale entries unreachable
+            epoch0 = fleet._placement_epoch
+            fleet.add_shard("t3", data[:600] * 0.5 + 1.0)
+            assert fleet._placement_epoch > epoch0
+            d2, g2, i2 = fleet.query(queries, K, placement="mesh")
+            assert i2.plan_cache_hits == 0
+            assert i2.plan_cache_misses == len(queries)
+            dh, gh, _ = fleet.query(queries, K, placement="host")
+            np.testing.assert_array_equal(d2, dh)
+            np.testing.assert_array_equal(g2, gh)
+        finally:
+            fleet.shards = [s for s in fleet.shards if s.key != "t3"]
+            if fleet.router is not None:
+                fleet.router.replace_span(3, 1)
+            fleet._invalidate_placement()
+            fleet.mesh = None
+
+    def test_fleet_engine_surfaces_cache_stats(self, small_fleet):
+        fleet, data, queries = small_fleet
+        fleet.attach_mesh(make_mesh((1,), ("data",)))
+        try:
+            engine = FleetEngine(fleet, batch_size=len(queries), k=K,
+                                 placement="mesh")
+            engine.run(queries)
+            assert engine.stats.plan_cache_misses >= len(queries)
+            h0 = engine.stats.plan_cache_hits
+            engine.run(queries)
+            assert engine.stats.plan_cache_hits >= h0 + len(queries)
+            assert 0.0 < engine.stats.plan_cache_hit_rate < 1.0
+        finally:
+            fleet._invalidate_placement()
+            fleet.mesh = None

@@ -62,3 +62,20 @@ def test_architecture_covers_every_package():
         needles.append(str(rel) if len(rel.parts) > 1 else rel.name)
     missing = [pkg for pkg in needles if pkg not in text]
     assert not missing, f"ARCHITECTURE.md does not mention: {missing}"
+
+
+def test_architecture_covers_every_fleet_module():
+    """The fleet is the subsystem that grows module-by-module (placement,
+    device planning, lifecycle…), so the owns-table must name every one of
+    its modules individually — a new ``fleet/*.py`` lands with a table row
+    or this fails."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    root = REPO / "src" / "repro" / "fleet"
+    missing = []
+    for mod in sorted(root.rglob("*.py")):
+        if mod.name.startswith("_"):
+            continue
+        rel = mod.relative_to(root.parent)          # e.g. fleet/device_plan.py
+        if str(rel) not in text:
+            missing.append(str(rel))
+    assert not missing, f"ARCHITECTURE.md owns-table misses: {missing}"
