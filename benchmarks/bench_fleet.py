@@ -23,6 +23,9 @@ steady-state serving throughput; every cell also carries the per-stage
 wall-time breakdown — ``plan_ms`` / ``refine_ms`` / ``merge_ms`` from
 ``FleetQueryInfo.stage_ms`` — so the device-resident-planning win shows up
 as a column of its own in the bench-trend table, not just in total qps.
+Each cell also carries ``latency_p50_ms`` / ``latency_p99_ms`` read from
+the fleet's ``fleet.query_latency_ms`` registry histogram (``repro.obs``)
+over the timed window, next to queries/sec.
 
 The **lifecycle** rows measure the fleet's persistence/maintenance plane
 (``repro.fleet.lifecycle``): wall time of one delta seal (``compaction_ms``
@@ -150,9 +153,15 @@ def run(lifecycle_only: bool = False) -> None:
                     # timed call measures steady-state serving throughput
                     fleet.query(queries, K, routing=routing,
                                 placement=placement)
+                    # quantiles come from the fleet's registry histogram;
+                    # reset it so the cell sees only the timed window (the
+                    # later audit_routing calls issue more queries)
+                    fleet.query_hist.reset()
                     (dist, gid, info), secs = timed(
                         lambda r=routing, p=placement: fleet.query(
                             queries, K, routing=r, placement=p))
+                    p50 = fleet.query_hist.quantile(0.5)
+                    p99 = fleet.query_hist.quantile(0.99)
                     qps = NUM_QUERIES / secs
                     r = recall(gid, np.asarray(exact_ids))
                     parts = float(info.partitions_touched.mean())
@@ -166,11 +175,14 @@ def run(lifecycle_only: bool = False) -> None:
                     emit(tag, 1e6 / qps if qps else 0.0,
                          f"qps={qps:.1f};recall={r:.3f};parts={parts:.1f};"
                          f"precision={precision:.3f};"
-                         f"plan_ms={stage.get('plan_ms', 0.0):.1f}")
+                         f"plan_ms={stage.get('plan_ms', 0.0):.1f};"
+                         f"p50={p50:.1f};p99={p99:.1f}")
                     cells.append({
                         "shards": shards, "delta_fill": fill,
                         "routing": routing, "placement": placement,
                         "queries_per_sec": round(qps, 2),
+                        "latency_p50_ms": round(p50, 3),
+                        "latency_p99_ms": round(p99, 3),
                         "recall": round(float(r), 4),
                         "mean_partitions_touched": round(parts, 2),
                         "mean_fanout": round(fanout, 2),

@@ -33,7 +33,7 @@ from repro.baselines import recall
 from repro.core import build_index
 from repro.core.query import plan as plan_queries
 from repro.core.refine import refine
-from repro.serve import ClimberEngine, EngineStats
+from repro.serve import ClimberEngine
 
 ART = Path(__file__).resolve().parents[1] / "artifacts"
 
@@ -125,13 +125,16 @@ def materialization_audit(index, queries: np.ndarray, k: int) -> dict:
 
 
 def _measure(engine: ClimberEngine, queries: np.ndarray):
-    """(queries/sec, mean parts touched, mean candidates, gid) post-warmup."""
+    """(queries/sec, mean parts, mean candidates, p50, p99, gid) after an
+    untimed warmup (reset_metrics drops the compile tick from the stats
+    AND the per-row latency histogram the quantiles read from)."""
     engine.run(queries[: engine.batch_size])       # compile, excluded
-    engine.stats = EngineStats()
+    engine.reset_metrics()
     _, gid, _ = engine.run(queries)
     s = engine.stats
     return (s.queries_per_sec, s.mean_partitions_touched,
-            s.mean_candidates_scanned, gid)
+            s.mean_candidates_scanned, engine.latency_hist.quantile(0.5),
+            engine.latency_hist.quantile(0.99), gid)
 
 
 def run() -> None:
@@ -149,15 +152,18 @@ def run() -> None:
             for bs in batches:
                 engine = ClimberEngine(index, batch_size=bs, variant=variant,
                                        k=K, use_kernel=use_kernel)
-                qps, parts, cands, gid = _measure(engine, q_sweep)
+                qps, parts, cands, p50, p99, gid = _measure(engine, q_sweep)
                 r = recall(np.asarray(gid),
                            np.asarray(exact_ids)[: len(q_sweep)])
                 tag = f"engine/{variant}/kernel{int(use_kernel)}/bs{bs}"
                 emit(tag, 1e6 / qps if qps else 0.0,
-                     f"qps={qps:.1f};parts={parts:.2f};recall={r:.3f}")
+                     f"qps={qps:.1f};parts={parts:.2f};recall={r:.3f};"
+                     f"p50={p50:.1f};p99={p99:.1f}")
                 cells.append({
                     "variant": variant, "use_kernel": use_kernel,
                     "batch_size": bs, "queries_per_sec": round(qps, 2),
+                    "latency_p50_ms": round(p50, 3),
+                    "latency_p99_ms": round(p99, 3),
                     "mean_partitions_touched": round(parts, 3),
                     "mean_candidates_scanned": round(cands, 1),
                     "recall": round(float(r), 4),

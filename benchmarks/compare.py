@@ -39,6 +39,7 @@ METRICS = (
     "mean_candidates_scanned", "routing_precision", "mean_fanout",
     "compaction_ms", "restart_replay_ms",       # fleet lifecycle columns
     "plan_ms", "refine_ms", "merge_ms",         # fleet per-stage breakdown
+    "latency_p50_ms", "latency_p99_ms",         # obs histogram quantiles
 )
 # metrics where bigger is better (the rest are informational)
 HIGHER_IS_BETTER = {"queries_per_sec", "recall", "routing_precision"}

@@ -1,7 +1,7 @@
 """Index-fleet serving example: shards + streaming ingest + lifecycle.
 
     PYTHONPATH=src python examples/serve_fleet.py [--shards 3] [--mesh]
-                                                  [--storage DIR]
+                                                  [--storage DIR] [--metrics]
 
 Builds a fleet of per-tenant CLIMBER shards, serves a request queue through
 one FleetEngine (signature routing fans each query out to a shard subset),
@@ -45,6 +45,9 @@ def main():
     ap.add_argument("--storage", default=None,
                     help="durable storage dir (WAL + shard snapshots); "
                          "default: a fresh temp dir")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the Prometheus text exposition page of the "
+                         "process metrics registry (repro.obs) at exit")
     args = ap.parse_args()
     storage = args.storage or tempfile.mkdtemp(prefix="fleet-storage-")
 
@@ -132,6 +135,14 @@ def main():
           f"pending WAL {life['wal_bytes']} bytes, "
           f"{life['merges']} merges, {life['retired_shards']} retired "
           f"(storage: {storage})")
+
+    if args.metrics:
+        # everything above recorded into the process registry: spans into
+        # span.* histograms, fleet/engine counters via collectors — this is
+        # the page a Prometheus scrape of the process would return
+        from repro.obs import REGISTRY, to_prometheus
+        print("\n# --- metrics (Prometheus text exposition) ---")
+        print(to_prometheus(REGISTRY), end="")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.refine import PAD_DIST, resolve_use_kernel
 from repro.fleet.fleet import IndexFleet
+from repro.obs import TRACER
 from repro.serve.knn_engine import BatchedServingLoop
 
 
@@ -71,6 +72,11 @@ class FleetEngine(BatchedServingLoop):
         self.merge_policy = merge_policy
         self.last_maintenance: dict = {"retired": [], "merged": []}
 
+    def reset_metrics(self) -> None:
+        """Zero both the loop's and the underlying fleet's metrics."""
+        super().reset_metrics()
+        self.fleet.reset_metrics()
+
     def _execute(self, qbatch: np.ndarray, nlive: int):
         """One tick: fleet-query the live rows, pad results back out.
 
@@ -83,7 +89,7 @@ class FleetEngine(BatchedServingLoop):
             variant=self.variant, use_kernel=self.use_kernel,
             fanout=self.fanout, placement=self.placement)
         dt = time.perf_counter() - t0
-        # surface the fleet's device-plan cache traffic (mesh placement)
+        # surface the fleet's plan-cache traffic (host and mesh placement)
         # through the same EngineStats counters the single-index engine uses
         self.stats.plan_cache_hits += info.plan_cache_hits
         self.stats.plan_cache_misses += info.plan_cache_misses
@@ -107,11 +113,13 @@ class FleetEngine(BatchedServingLoop):
         merge/retirement policy.  Returns the maintenance report.
         """
         fleet = self.fleet
-        if fleet.cfg.auto_compact and \
-                fleet.delta.occupancy >= max(fleet.cfg.delta_capacity,
-                                             fleet.delta.min_build):
-            fleet.compact_async()
-        self.last_maintenance = fleet.maintenance(policy=self.merge_policy)
+        with TRACER.span("fleet.maintenance"):
+            if fleet.cfg.auto_compact and \
+                    fleet.delta.occupancy >= max(fleet.cfg.delta_capacity,
+                                                 fleet.delta.min_build):
+                fleet.compact_async()
+            self.last_maintenance = \
+                fleet.maintenance(policy=self.merge_policy)
         return self.last_maintenance
 
     def _after_tick(self) -> None:

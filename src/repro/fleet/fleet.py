@@ -44,7 +44,21 @@ Placement — where the sealed shards execute:
     on (placement epoch, planner variant, query bytes); the epoch
     increments whenever the sealed shard set or mesh changes
     (``add_shard`` / seal / merge / retire / ``attach_mesh``), so a hit
-    can never replay a plan row from a retired layout.
+    can never replay a plan row from a retired layout.  The host loop
+    memoizes through the same cache (per-shard rows keyed on
+    (``"host"``, epoch, variant, shard slot, query bytes)), so
+    ``FleetQueryInfo.plan_cache_hits`` / ``plan_cache_misses`` report on
+    both placements identically.
+
+Observability: every query opens a ``fleet.query`` span with
+``fleet.plan`` / ``fleet.refine`` / ``fleet.merge`` children (per sealed
+shard on the host loop, per device program on the mesh), ingest opens
+``fleet.insert → wal.append / delta.scatter``, and the background
+compactor opens ``compact.seal → compact.build / compact.swap`` on its
+worker thread — see ``repro.obs`` and docs/OBSERVABILITY.md.  Call
+latencies land in the ``fleet.query_latency_ms`` registry histogram
+(labelled per fleet instance), which is where the benchmarks read their
+p50/p99 columns.
 
 ``mesh=`` at construction (or :meth:`IndexFleet.attach_mesh`) enables the
 mesh path and makes it the default; without a mesh the default stays
@@ -76,8 +90,10 @@ a restart and stay healthy over time:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
+import weakref
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
@@ -94,8 +110,12 @@ from repro.core.query import (candidates_scanned, exhaustive_selection,
 from repro.core.refine import PAD_DIST, dispatch_refine, merge_topk, refine
 from repro.distributed.store import concat_stores
 from repro.fleet.router import SignatureRouter
+from repro.obs import REGISTRY, TRACER
 from repro.serve.knn_engine import PlanCache
 from repro.utils.config import ClimberConfig
+
+# distinguishes each fleet's metric series in the process registry
+_FLEET_SEQ = itertools.count()
 
 
 @dataclass(frozen=True)
@@ -111,8 +131,8 @@ class FleetConfig:
     auto_compact: bool = True       # seal automatically at delta_capacity
     background_compaction: bool = False  # auto-compaction returns before the
                                          # rebuild finishes (ticket-based)
-    plan_cache_size: int = 256      # LRU capacity of the per-query device
-                                    # plan cache (mesh placement; 0 = off)
+    plan_cache_size: int = 256      # LRU capacity of the per-query plan
+                                    # cache (host and mesh placement; 0 = off)
     seed: int = 0
 
 
@@ -202,8 +222,8 @@ class FleetQueryInfo:
                                       # this is the whole device program,
                                       # planning included), merge_ms
                                       # (host-side merge folds + delta)
-    plan_cache_hits: int = 0          # per-query device-plan cache hits of
-    plan_cache_misses: int = 0        # this call (mesh placement only)
+    plan_cache_hits: int = 0          # per-query plan-cache hits of this
+    plan_cache_misses: int = 0        # call (host and mesh placement)
 
 
 class DeltaShard:
@@ -403,8 +423,44 @@ class IndexFleet:
         self._sealing_frames: List[Tuple[np.ndarray, np.ndarray]] = []
         self._sealing_segs: List[int] = []
         self._seal_ticket = None        # in-flight CompactionTicket
+        # -- observability (repro.obs) ------------------------------------
+        # per-instance label: benchmark cells build fresh fleets and must
+        # not share latency series; FleetStats keeps its exact dataclass
+        # shape (snapshot() keys are tier-1-tested), so derived rates are
+        # exposed through a weakref collector instead of new fields
+        self.obs_label = f"fleet{next(_FLEET_SEQ)}"
+        self.query_hist = REGISTRY.histogram("fleet.query_latency_ms",
+                                             fleet=self.obs_label)
+        self.compaction_hist = REGISTRY.histogram("fleet.compaction_ms",
+                                                  fleet=self.obs_label)
+        ref = weakref.ref(self)
+
+        def _collect():
+            fleet = ref()
+            if fleet is None:
+                return None
+            s = fleet.stats
+            return {"fleet.queries": s.queries,
+                    "fleet.inserts": s.inserts,
+                    "fleet.compactions": s.compactions,
+                    "fleet.delta_occupancy": s.delta_occupancy,
+                    "fleet.wal_bytes": s.wal_bytes,
+                    "fleet.routing_precision": s.routing_precision,
+                    "fleet.fanout_savings": s.fanout_savings,
+                    "fleet.shards": len(fleet.shards)}
+
+        REGISTRY.add_collector(_collect, fleet=self.obs_label)
         if storage_dir is not None:
             self.attach_storage(storage_dir)
+
+    def reset_metrics(self) -> None:
+        """Zero the aggregate stats and this fleet's latency histograms
+        (benchmarks call it between warmup and the timed window)."""
+        with self._lock:
+            self.stats = FleetStats()
+            self._refresh_gauges()
+        self.query_hist.reset()
+        self.compaction_hist.reset()
 
     # -- mesh placement ---------------------------------------------------
     def attach_mesh(self, mesh, *, data_axis: str = "data") -> None:
@@ -677,19 +733,22 @@ class IndexFleet:
     def _log_frame(self, gids: np.ndarray, batch: np.ndarray) -> None:
         """Record one insert batch: WAL append (the durability point —
         strictly before the delta scatter) + the in-memory frame list."""
-        if self.wal is not None:
-            self.wal.append(gids, batch)
-        self._frames.append((gids, batch))
+        with TRACER.span("wal.append", rows=len(gids),
+                         durable=self.wal is not None):
+            if self.wal is not None:
+                self.wal.append(gids, batch)
+            self._frames.append((gids, batch))
 
     def _ingest(self, batch: np.ndarray, gids: np.ndarray) -> None:
         """Apply one logged batch to the delta (lock held; no WAL write —
         shared by live inserts and WAL replay)."""
-        before = self.delta.rebuilds
-        self.delta.insert(batch, gids)
-        # accumulated delta contents, not just this batch: small first
-        # batches must not stop the router from ever being built
-        self._ensure_router(self.delta.data)
-        self.stats.delta_rebuilds += self.delta.rebuilds - before
+        with TRACER.span("delta.scatter", rows=len(batch)):
+            before = self.delta.rebuilds
+            self.delta.insert(batch, gids)
+            # accumulated delta contents, not just this batch: small first
+            # batches must not stop the router from ever being built
+            self._ensure_router(self.delta.data)
+            self.stats.delta_rebuilds += self.delta.rebuilds - before
         self.stats.inserts += len(batch)
         self._refresh_gauges()
 
@@ -736,13 +795,14 @@ class IndexFleet:
         if batch.ndim != 2 or batch.shape[1] != self.cfg.shard_cfg.series_len:
             raise ValueError(f"insert batch shape {batch.shape} != "
                              f"[B, {self.cfg.shard_cfg.series_len}]")
-        with self._lock:
-            gids = np.arange(self._next_gid, self._next_gid + len(batch),
-                             dtype=np.int32)
-            self._next_gid += len(batch)
-            self._log_frame(gids, batch)
-            self._ingest(batch, gids)
-        self._maybe_auto_compact()
+        with TRACER.span("fleet.insert", rows=len(batch)):
+            with self._lock:
+                gids = np.arange(self._next_gid, self._next_gid + len(batch),
+                                 dtype=np.int32)
+                self._next_gid += len(batch)
+                self._log_frame(gids, batch)
+                self._ingest(batch, gids)
+            self._maybe_auto_compact()
         return gids
 
     # -- compaction (freeze → build off-lock → swap) ----------------------
@@ -901,42 +961,79 @@ class IndexFleet:
                            use_kernel: Optional[bool],
                            best_d: np.ndarray, best_g: np.ndarray,
                            touched: np.ndarray, scanned: np.ndarray,
-                           stage: dict) -> None:
+                           stage: dict, epoch: int) -> None:
         """The host-loop oracle: one featurize→plan→refine dispatch per
-        sealed shard (the arithmetic of ``knn_query``, staged so the
+        sealed shard (the arithmetic of ``knn_query``, staged under
+        ``fleet.plan`` / ``fleet.refine`` / ``fleet.merge`` spans so the
         per-stage timers see plan vs refine vs merge), fused on the host
-        in shard order (accumulators in place)."""
+        in shard order (accumulators in place).
+
+        Planning memoizes per (shard, query) through the fleet's
+        :class:`PlanCache` under ``("host", epoch, variant, shard slot,
+        query bytes)`` — disjoint from the mesh path's 3-tuple keys, and
+        epoch-invalidated the same way.  A shard whose routed rows all hit
+        assembles the plan on the host and skips its featurize+plan jits;
+        cached rows are exactly a prior plan's output, so caching never
+        changes results."""
+        cache = self._plan_cache if self.cfg.plan_cache_size else None
         for si, shard in enumerate(shards):
             qsel = np.nonzero(mask[:, si])[0]
             if not len(qsel):
                 continue
             qj = jnp.asarray(queries[qsel])
-            t0 = time.perf_counter()
-            p4r, _ = shard.index.featurize(qj)
-            qp = plan(shard.index, p4r, variant=variant)
-            jax.block_until_ready(qp.sel_part)
-            t1 = time.perf_counter()
-            dist, gid = dispatch_refine(shard.index.store, qj,
-                                        qp.sel_part, qp.sel_lo, qp.sel_hi,
-                                        k, use_kernel=use_kernel)
-            dist, gid = np.asarray(dist), np.asarray(gid)
-            t2 = time.perf_counter()
-            gg = np.where(gid >= 0,
-                          shard.global_ids[np.maximum(gid, 0)],
-                          -1).astype(np.int32)
-            md, mg = merge_topk(jnp.asarray(best_d[qsel]),
-                                jnp.asarray(best_g[qsel]),
-                                jnp.asarray(dist), jnp.asarray(gg), k)
-            best_d[qsel] = np.asarray(md)
-            best_g[qsel] = np.asarray(mg)
-            t3 = time.perf_counter()
-            stage["plan_ms"] += (t1 - t0) * 1e3
-            stage["refine_ms"] += (t2 - t1) * 1e3
-            stage["merge_ms"] += (t3 - t2) * 1e3
-            pt = np.asarray(qp.partitions_touched(), np.int64)
+            with TRACER.span("fleet.plan", shard=shard.key) as sp_plan:
+                keys = rows = None
+                if cache is not None:
+                    keys = [("host", epoch, variant, si,
+                             queries[i].tobytes()) for i in qsel]
+                    rows = [cache.get(kk) for kk in keys]
+                if rows is not None and all(r is not None for r in rows):
+                    nq, mp = len(qsel), rows[0][0].shape[-1]
+                    sel_part = np.empty((nq, mp), np.int32)
+                    sel_lo = np.empty((nq, mp), np.int32)
+                    sel_hi = np.empty((nq, mp), np.int32)
+                    pt = np.empty(nq, np.int64)
+                    sc = np.empty(nq, np.int64)
+                    for i, r in enumerate(rows):
+                        sel_part[i], sel_lo[i], sel_hi[i], pt[i], sc[i] = r
+                    sel_part, sel_lo, sel_hi = (jnp.asarray(sel_part),
+                                                jnp.asarray(sel_lo),
+                                                jnp.asarray(sel_hi))
+                else:
+                    p4r, _ = shard.index.featurize(qj)
+                    qp = plan(shard.index, p4r, variant=variant)
+                    jax.block_until_ready(qp.sel_part)
+                    sel_part, sel_lo, sel_hi = (qp.sel_part, qp.sel_lo,
+                                                qp.sel_hi)
+                    pt = np.asarray(qp.partitions_touched(), np.int64)
+                    sc = np.asarray(
+                        candidates_scanned(qp, shard.index.store), np.int64)
+                    if cache is not None:
+                        sp_np, lo_np, hi_np = (np.asarray(qp.sel_part),
+                                               np.asarray(qp.sel_lo),
+                                               np.asarray(qp.sel_hi))
+                        for i, kk in enumerate(keys):
+                            cache.put(kk, (sp_np[i], lo_np[i], hi_np[i],
+                                           pt[i], sc[i]))
+            with TRACER.span("fleet.refine", shard=shard.key) as sp_ref:
+                dist, gid = dispatch_refine(shard.index.store, qj,
+                                            sel_part, sel_lo, sel_hi,
+                                            k, use_kernel=use_kernel)
+                dist, gid = np.asarray(dist), np.asarray(gid)
+            with TRACER.span("fleet.merge", shard=shard.key) as sp_mrg:
+                gg = np.where(gid >= 0,
+                              shard.global_ids[np.maximum(gid, 0)],
+                              -1).astype(np.int32)
+                md, mg = merge_topk(jnp.asarray(best_d[qsel]),
+                                    jnp.asarray(best_g[qsel]),
+                                    jnp.asarray(dist), jnp.asarray(gg), k)
+                best_d[qsel] = np.asarray(md)
+                best_g[qsel] = np.asarray(mg)
+            stage["plan_ms"] += sp_plan.duration_ms
+            stage["refine_ms"] += sp_ref.duration_ms
+            stage["merge_ms"] += sp_mrg.duration_ms
             touched[qsel] += pt
-            scanned[qsel] += np.asarray(
-                candidates_scanned(qp, shard.index.store), np.int64)
+            scanned[qsel] += sc
             self.stats.observe_shard(shard.key, len(qsel), int(pt.sum()))
 
     def _query_sealed_mesh(self, shards, pl, queries: np.ndarray, k: int,
@@ -966,39 +1063,44 @@ class IndexFleet:
         routed_t = np.zeros((pl.num_slots, qn), dtype=bool)
         routed_t[: len(shards)] = mask.T
         cache = self._plan_cache
-        t0 = time.perf_counter()
-        keys = [(epoch, variant, queries[i].tobytes()) for i in range(qn)]
-        rows = [cache.get(kk) for kk in keys]
-        if qn and all(r is not None for r in rows):
-            b = rows[0][0].shape[-1]
-            sp = np.empty((pl.num_slots, qn, b), np.int32)
-            lo = np.empty((pl.num_slots, qn, b), np.int32)
-            hi = np.empty((pl.num_slots, qn, b), np.int32)
-            pt_all = np.empty((pl.num_slots, qn), np.int64)
-            sc_all = np.empty((pl.num_slots, qn), np.int64)
-            for i, r in enumerate(rows):
-                sp[:, i], lo[:, i], hi[:, i], pt_all[:, i], sc_all[:, i] = r
-            spm = np.where(routed_t[:, :, None], sp, -1)
-            t1 = time.perf_counter()
-            stage["plan_ms"] += (t1 - t0) * 1e3
-            dist, gid = pl.dispatch(queries, spm, lo, hi, k,
-                                    use_kernel=use_kernel)
-            stage["refine_ms"] += (time.perf_counter() - t1) * 1e3
+        with TRACER.span("fleet.plan", path="mesh") as sp_plan:
+            keys = [(epoch, variant, queries[i].tobytes())
+                    for i in range(qn)]
+            rows = [cache.get(kk) for kk in keys]
+            all_hit = bool(qn) and all(r is not None for r in rows)
+            if all_hit:
+                b = rows[0][0].shape[-1]
+                sp = np.empty((pl.num_slots, qn, b), np.int32)
+                lo = np.empty((pl.num_slots, qn, b), np.int32)
+                hi = np.empty((pl.num_slots, qn, b), np.int32)
+                pt_all = np.empty((pl.num_slots, qn), np.int64)
+                sc_all = np.empty((pl.num_slots, qn), np.int64)
+                for i, r in enumerate(rows):
+                    sp[:, i], lo[:, i], hi[:, i], pt_all[:, i], \
+                        sc_all[:, i] = r
+                spm = np.where(routed_t[:, :, None], sp, -1)
+        stage["plan_ms"] += sp_plan.duration_ms
+        if all_hit:
+            with TRACER.span("fleet.refine", path="mesh") as sp_ref:
+                dist, gid = pl.dispatch(queries, spm, lo, hi, k,
+                                        use_kernel=use_kernel)
+            stage["refine_ms"] += sp_ref.duration_ms
         else:
-            t1 = time.perf_counter()
-            stage["plan_ms"] += (t1 - t0) * 1e3
-            dist, gid, sp, lo, hi, pt_all, sc_all = pl.query(
-                queries, routed_t, k, variant=variant, use_kernel=use_kernel)
-            t2 = time.perf_counter()
             # the fused pass plans on device, inseparably from refine
-            stage["refine_ms"] += (t2 - t1) * 1e3
-            for i, kk in enumerate(keys):
-                cache.put(kk, (sp[:, i], lo[:, i], hi[:, i],
-                               pt_all[:, i].astype(np.int64),
-                               sc_all[:, i].astype(np.int64)))
-            pt_all = pt_all.astype(np.int64)
-            sc_all = sc_all.astype(np.int64)
-            stage["plan_ms"] += (time.perf_counter() - t2) * 1e3
+            with TRACER.span("fleet.refine", path="mesh",
+                             fused=True) as sp_ref:
+                dist, gid, sp, lo, hi, pt_all, sc_all = pl.query(
+                    queries, routed_t, k, variant=variant,
+                    use_kernel=use_kernel)
+            stage["refine_ms"] += sp_ref.duration_ms
+            with TRACER.span("fleet.plan", path="mesh") as sp_put:
+                for i, kk in enumerate(keys):
+                    cache.put(kk, (sp[:, i], lo[:, i], hi[:, i],
+                                   pt_all[:, i].astype(np.int64),
+                                   sc_all[:, i].astype(np.int64)))
+                pt_all = pt_all.astype(np.int64)
+                sc_all = sc_all.astype(np.int64)
+            stage["plan_ms"] += sp_put.duration_ms
         best_d[:], best_g[:] = dist, gid
         for si, shard in enumerate(shards):
             routed = mask[:, si]
@@ -1025,43 +1127,43 @@ class IndexFleet:
         batch-dependent here)."""
         qn = len(queries)
         qj = jnp.asarray(queries)
-        t0 = time.perf_counter()
-        plans = []
-        for si, shard in enumerate(shards):
-            if not mask[:, si].any():   # host loop skips unrouted shards:
-                plans.append(None)      # don't plan what won't execute
-                continue
-            p4r, _ = shard.index.featurize(qj)
-            plans.append(plan(shard.index, p4r, variant=variant))
-        if all(qp is None for qp in plans):
-            return                      # nothing routed: accumulators stay PAD
-        mp = max(int(qp.sel_part.shape[-1]) for qp in plans
-                 if qp is not None)
-        sp = np.full((pl.num_slots, qn, mp), -1, np.int32)
-        lo = np.zeros((pl.num_slots, qn, mp), np.int32)
-        hi = np.zeros((pl.num_slots, qn, mp), np.int32)
-        for si, (shard, qp) in enumerate(zip(shards, plans)):
-            if qp is None:
-                continue
-            w = int(qp.sel_part.shape[-1])
-            routed = mask[:, si]
-            sp[si, :, :w] = np.where(routed[:, None],
-                                     np.asarray(qp.sel_part), -1)
-            lo[si, :, :w] = np.asarray(qp.sel_lo)
-            hi[si, :, :w] = np.asarray(qp.sel_hi)
-            pt = np.asarray(qp.partitions_touched(), np.int64)
-            touched += np.where(routed, pt, 0)
-            scanned += np.where(
-                routed,
-                np.asarray(candidates_scanned(qp, shard.index.store),
-                           np.int64), 0)
-            self.stats.observe_shard(shard.key, int(routed.sum()),
-                                     int(pt[routed].sum()))
-        t1 = time.perf_counter()
-        stage["plan_ms"] += (t1 - t0) * 1e3
-        dist, gid = pl.dispatch(queries, sp, lo, hi, k,
-                                use_kernel=use_kernel)
-        stage["refine_ms"] += (time.perf_counter() - t1) * 1e3
+        with TRACER.span("fleet.plan", path="mesh-hostplan") as sp_plan:
+            plans = []
+            for si, shard in enumerate(shards):
+                if not mask[:, si].any():  # host loop skips unrouted shards:
+                    plans.append(None)     # don't plan what won't execute
+                    continue
+                p4r, _ = shard.index.featurize(qj)
+                plans.append(plan(shard.index, p4r, variant=variant))
+            if all(qp is None for qp in plans):
+                return                  # nothing routed: accumulators stay PAD
+            mp = max(int(qp.sel_part.shape[-1]) for qp in plans
+                     if qp is not None)
+            sp = np.full((pl.num_slots, qn, mp), -1, np.int32)
+            lo = np.zeros((pl.num_slots, qn, mp), np.int32)
+            hi = np.zeros((pl.num_slots, qn, mp), np.int32)
+            for si, (shard, qp) in enumerate(zip(shards, plans)):
+                if qp is None:
+                    continue
+                w = int(qp.sel_part.shape[-1])
+                routed = mask[:, si]
+                sp[si, :, :w] = np.where(routed[:, None],
+                                         np.asarray(qp.sel_part), -1)
+                lo[si, :, :w] = np.asarray(qp.sel_lo)
+                hi[si, :, :w] = np.asarray(qp.sel_hi)
+                pt = np.asarray(qp.partitions_touched(), np.int64)
+                touched += np.where(routed, pt, 0)
+                scanned += np.where(
+                    routed,
+                    np.asarray(candidates_scanned(qp, shard.index.store),
+                               np.int64), 0)
+                self.stats.observe_shard(shard.key, int(routed.sum()),
+                                         int(pt[routed].sum()))
+        stage["plan_ms"] += sp_plan.duration_ms
+        with TRACER.span("fleet.refine", path="mesh-hostplan") as sp_ref:
+            dist, gid = pl.dispatch(queries, sp, lo, hi, k,
+                                    use_kernel=use_kernel)
+        stage["refine_ms"] += sp_ref.duration_ms
         best_d[:], best_g[:] = dist, gid
 
     def _merge_delta_answer(self, delta: DeltaShard, queries: np.ndarray,
@@ -1137,53 +1239,59 @@ class IndexFleet:
         scanned = np.zeros(qn, np.int64)
         stage = {"plan_ms": 0.0, "refine_ms": 0.0, "merge_ms": 0.0}
 
-        # consistent view: shard list + both deltas are captured under the
-        # lock; the (slow) sealed-shard execution then runs off-lock.  The
-        # captured delta object stays correct even if a freeze/seal
-        # re-points ``self.delta`` meanwhile — freezing never mutates it.
-        with self._lock:
-            shards = list(self.shards)
-            sealing = self._sealing
-            delta = self.delta
-            s = len(shards)
-            pl = self._ensure_placement() \
-                if placement == "mesh" and s else None
-            epoch = self._placement_epoch
-            cache = self._plan_cache
-            h0, m0 = cache.hits, cache.misses
-            lifecycle = self.stats.lifecycle_snapshot()
-            # mask under the same lock: the router registry is only ever
-            # resized (seal/merge/retire) while it is held, so the mask
-            # width always matches the captured shard list
-            if routing == "exhaustive" or self.router is None or s == 0:
-                mask = np.ones((qn, s), dtype=bool)
-            else:
-                mask = self.router.route(queries,
-                                         fanout or self.cfg.fanout)
+        with TRACER.span("fleet.query", placement=placement,
+                         queries=qn) as sp_root:
+            # consistent view: shard list + both deltas are captured under
+            # the lock; the (slow) sealed-shard execution then runs
+            # off-lock.  The captured delta object stays correct even if a
+            # freeze/seal re-points ``self.delta`` meanwhile — freezing
+            # never mutates it.
+            with self._lock:
+                shards = list(self.shards)
+                sealing = self._sealing
+                delta = self.delta
+                s = len(shards)
+                pl = self._ensure_placement() \
+                    if placement == "mesh" and s else None
+                epoch = self._placement_epoch
+                cache = self._plan_cache
+                h0, m0 = cache.hits, cache.misses
+                lifecycle = self.stats.lifecycle_snapshot()
+                # mask under the same lock: the router registry is only
+                # ever resized (seal/merge/retire) while it is held, so the
+                # mask width always matches the captured shard list
+                if routing == "exhaustive" or self.router is None or s == 0:
+                    mask = np.ones((qn, s), dtype=bool)
+                else:
+                    mask = self.router.route(queries,
+                                             fanout or self.cfg.fanout)
 
-        if s:
-            if placement == "mesh":
-                self._query_sealed_mesh(shards, pl, queries, k, mask,
-                                        variant, use_kernel, best_d, best_g,
-                                        touched, scanned, stage, epoch)
-            else:
-                self._query_sealed_host(shards, queries, k, mask, variant,
-                                        use_kernel, best_d, best_g,
-                                        touched, scanned, stage)
+            if s:
+                if placement == "mesh":
+                    self._query_sealed_mesh(shards, pl, queries, k, mask,
+                                            variant, use_kernel, best_d,
+                                            best_g, touched, scanned,
+                                            stage, epoch)
+                else:
+                    self._query_sealed_host(shards, queries, k, mask,
+                                            variant, use_kernel, best_d,
+                                            best_g, touched, scanned,
+                                            stage, epoch)
 
-        td = time.perf_counter()
-        if sealing is not None:       # frozen mid-compaction: immutable
-            best_d, best_g = self._merge_delta_answer(
-                sealing, queries, k, variant, use_kernel,
-                best_d, best_g, touched, scanned)
-        with self._lock:              # live delta: serialize vs. inserts
-            best_d, best_g = self._merge_delta_answer(
-                delta, queries, k, variant, use_kernel,
-                best_d, best_g, touched, scanned)
-            self.stats.queries += qn
-            self.stats.routed_pairs += int(mask.sum())
-            self.stats.exhaustive_pairs += qn * s
-        stage["merge_ms"] += (time.perf_counter() - td) * 1e3
+            with TRACER.span("fleet.merge", shard=self.DELTA_KEY) as sp_mrg:
+                if sealing is not None:   # frozen mid-compaction: immutable
+                    best_d, best_g = self._merge_delta_answer(
+                        sealing, queries, k, variant, use_kernel,
+                        best_d, best_g, touched, scanned)
+                with self._lock:          # live delta: serialize vs inserts
+                    best_d, best_g = self._merge_delta_answer(
+                        delta, queries, k, variant, use_kernel,
+                        best_d, best_g, touched, scanned)
+                    self.stats.queries += qn
+                    self.stats.routed_pairs += int(mask.sum())
+                    self.stats.exhaustive_pairs += qn * s
+            stage["merge_ms"] += sp_mrg.duration_ms
+        self.query_hist.observe(sp_root.duration_ms)
         return best_d, best_g, FleetQueryInfo(
             partitions_touched=touched, candidates_scanned=scanned,
             routed_mask=mask, lifecycle=lifecycle, stage_ms=stage,

@@ -30,6 +30,8 @@ import threading
 import time
 from typing import Optional
 
+from repro.obs import TRACER
+
 
 class CompactionTicket:
     """Handle on one in-flight background seal."""
@@ -67,7 +69,8 @@ def start_background_compaction(fleet) -> Optional[CompactionTicket]:
     with fleet._lock:
         if fleet._seal_ticket is not None and not fleet._seal_ticket.done():
             return fleet._seal_ticket
-        frozen = fleet._freeze()        # may raise ValueError (< num_pivots)
+        with TRACER.span("compact.freeze"):
+            frozen = fleet._freeze()    # may raise ValueError (< num_pivots)
         if frozen is None:
             return None
         ticket = CompactionTicket(fleet)
@@ -75,26 +78,34 @@ def start_background_compaction(fleet) -> Optional[CompactionTicket]:
 
     def _worker():
         t0 = time.perf_counter()
-        try:
-            index = fleet._build_shard_index(frozen.data, frozen.fold)
-            from repro.fleet.fleet import ShardHandle
-            handle = ShardHandle(key=frozen.key, index=index,
-                                 global_ids=frozen.global_ids,
-                                 created_at=time.time())
-            fleet._finish_seal(frozen, handle)
-            ticket.handle = handle
-        except BaseException as exc:    # noqa: BLE001 — surface on ticket
+        # the worker thread's own root span: its compact.* tree interleaves
+        # with the serving thread's fleet.query trees in the tracer ring
+        with TRACER.span("compact.seal", key=frozen.key,
+                         records=len(frozen.data)):
             try:
-                fleet._abort_seal(frozen)
+                with TRACER.span("compact.build"):
+                    index = fleet._build_shard_index(frozen.data,
+                                                     frozen.fold)
+                from repro.fleet.fleet import ShardHandle
+                handle = ShardHandle(key=frozen.key, index=index,
+                                     global_ids=frozen.global_ids,
+                                     created_at=time.time())
+                with TRACER.span("compact.swap"):
+                    fleet._finish_seal(frozen, handle)
+                ticket.handle = handle
+            except BaseException as exc:  # noqa: BLE001 — surface on ticket
+                try:
+                    fleet._abort_seal(frozen)
+                finally:
+                    ticket.error = exc
             finally:
-                ticket.error = exc
-        finally:
-            ticket.seconds = time.perf_counter() - t0
-            with fleet._lock:
-                fleet.stats.compaction_ms += ticket.seconds * 1e3
-                if fleet._seal_ticket is ticket:
-                    fleet._seal_ticket = None
-            ticket._event.set()
+                ticket.seconds = time.perf_counter() - t0
+                with fleet._lock:
+                    fleet.stats.compaction_ms += ticket.seconds * 1e3
+                    if fleet._seal_ticket is ticket:
+                        fleet._seal_ticket = None
+                fleet.compaction_hist.observe(ticket.seconds * 1e3)
+                ticket._event.set()
 
     thread = threading.Thread(target=_worker, name="fleet-compactor",
                               daemon=True)

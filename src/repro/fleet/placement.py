@@ -190,55 +190,62 @@ class MeshFleetPlacement:
             # data…count: [per, ...] this device's resident shards;
             # tab/piv/cent/t_real: their stacked skeletons + planner inputs;
             # routed: [per, Q] fan-out mask.  Queries are replicated.
-            z = _paa(q, w)                         # shard-independent
+            # named_scope markers label the fused stages on captured
+            # profiler traces (see repro.obs.profile)
+            with jax.named_scope("climber.featurize"):
+                z = _paa(q, w)                     # shard-independent
             d_l, g_l, sp_l, lo_l, hi_l, pt_l, sc_l = ([] for _ in range(7))
             for j in range(per):                   # static unroll
                 st = PartitionStore(data=data[j], norms=norms[j],
                                     rec_dfs=rdfs[j], rec_gid=rgid[j],
                                     count=count[j])
-                p4r = sig_mod.rank_signature(z, piv[j], m)
-                trie = trie_row(tab, j, num_pivots=r,
-                                num_partitions=p_static)
-                view = ShardView(cfg, cent[j], trie)
-                ctx = ShardPlanContext(
-                    num_groups=tab.num_groups[j],
-                    num_candidates=t_real[j],
-                    num_partitions=tab.num_partitions[j],
-                    t_static=t_static, p_static=p_static)
-                qp = planner(view, p4r, ctx)
-                if qp.sel_part.shape[-1] > b:      # live-first, host's drops
-                    qp = compact_plan(qp, b)
-                sp, lo, hi = qp.sel_part, qp.sel_lo, qp.sel_hi
-                if sp.shape[-1] < b:
-                    pad2 = ((0, 0), (0, b - sp.shape[-1]))
-                    sp = jnp.pad(sp, pad2, constant_values=-1)
-                    lo, hi = jnp.pad(lo, pad2), jnp.pad(hi, pad2)
-                qp_b = QueryPlan(sel_part=sp, sel_lo=lo, sel_hi=hi,
-                                 node=qp.node, pathlen=qp.pathlen)
-                # metrics from the unmasked plan — the host loop computes
-                # them per shard before applying the routing mask
-                pt_l.append(qp_b.partitions_touched())
-                sc_l.append(candidates_scanned(qp_b, st))
-                spm = jnp.where(routed[j][:, None], sp, -1)
-                d, g = refine(st, q, spm, lo, hi, k, use_kernel=use_kernel)
+                with jax.named_scope("climber.plan"):
+                    p4r = sig_mod.rank_signature(z, piv[j], m)
+                    trie = trie_row(tab, j, num_pivots=r,
+                                    num_partitions=p_static)
+                    view = ShardView(cfg, cent[j], trie)
+                    ctx = ShardPlanContext(
+                        num_groups=tab.num_groups[j],
+                        num_candidates=t_real[j],
+                        num_partitions=tab.num_partitions[j],
+                        t_static=t_static, p_static=p_static)
+                    qp = planner(view, p4r, ctx)
+                    if qp.sel_part.shape[-1] > b:  # live-first, host's drops
+                        qp = compact_plan(qp, b)
+                    sp, lo, hi = qp.sel_part, qp.sel_lo, qp.sel_hi
+                    if sp.shape[-1] < b:
+                        pad2 = ((0, 0), (0, b - sp.shape[-1]))
+                        sp = jnp.pad(sp, pad2, constant_values=-1)
+                        lo, hi = jnp.pad(lo, pad2), jnp.pad(hi, pad2)
+                    qp_b = QueryPlan(sel_part=sp, sel_lo=lo, sel_hi=hi,
+                                     node=qp.node, pathlen=qp.pathlen)
+                    # metrics from the unmasked plan — the host loop
+                    # computes them per shard before the routing mask
+                    pt_l.append(qp_b.partitions_touched())
+                    sc_l.append(candidates_scanned(qp_b, st))
+                with jax.named_scope("climber.refine"):
+                    spm = jnp.where(routed[j][:, None], sp, -1)
+                    d, g = refine(st, q, spm, lo, hi, k,
+                                  use_kernel=use_kernel)
                 d_l.append(d)
                 g_l.append(g)
                 sp_l.append(sp)
                 lo_l.append(lo)
                 hi_l.append(hi)
-            d_loc, g_loc = jnp.stack(d_l), jnp.stack(g_l)   # [per, Q, k]
-            # one collective: every device sees every shard's local top-k
-            d_all = jax.lax.all_gather(d_loc, axis, axis=0)  # [D, per, Q, k]
-            g_all = jax.lax.all_gather(g_loc, axis, axis=0)
-            d_all = d_all.reshape(s_pad, *d_loc.shape[1:])   # shard order
-            g_all = g_all.reshape(s_pad, *g_loc.shape[1:])
-            # fold in global shard order — the host loop's merge order, so
-            # results (incl. tie-breaks) are bit-identical to the oracle
-            best_d = jnp.full(d_loc.shape[1:], PAD_DIST, jnp.float32)
-            best_g = jnp.full(g_loc.shape[1:], -1, jnp.int32)
-            for s in range(s_pad):
-                best_d, best_g = merge_topk(best_d, best_g,
-                                            d_all[s], g_all[s], k)
+            with jax.named_scope("climber.merge"):
+                d_loc, g_loc = jnp.stack(d_l), jnp.stack(g_l)  # [per, Q, k]
+                # one collective: every device sees every shard's top-k
+                d_all = jax.lax.all_gather(d_loc, axis, axis=0)
+                g_all = jax.lax.all_gather(g_loc, axis, axis=0)
+                d_all = d_all.reshape(s_pad, *d_loc.shape[1:])  # shard order
+                g_all = g_all.reshape(s_pad, *g_loc.shape[1:])
+                # fold in global shard order — the host loop's merge order,
+                # so results (incl. tie-breaks) are bit-identical
+                best_d = jnp.full(d_loc.shape[1:], PAD_DIST, jnp.float32)
+                best_g = jnp.full(g_loc.shape[1:], -1, jnp.int32)
+                for s in range(s_pad):
+                    best_d, best_g = merge_topk(best_d, best_g,
+                                                d_all[s], g_all[s], k)
             return (best_d, best_g, jnp.stack(sp_l), jnp.stack(lo_l),
                     jnp.stack(hi_l), jnp.stack(pt_l), jnp.stack(sc_l))
 
@@ -287,11 +294,12 @@ class MeshFleetPlacement:
             fn = self._query[key] = self._build_query(variant, k,
                                                       use_kernel, b)
         st = self.store
-        outs = fn(st.data, st.norms, st.rec_dfs, st.rec_gid, st.count,
-                  self.tables, self.pivots, self.centroids, self.t_real,
-                  jnp.asarray(queries, jnp.float32),
-                  jnp.asarray(routed, bool))
-        return tuple(np.asarray(o) for o in outs)
+        with jax.profiler.TraceAnnotation("fleet.mesh.query"):
+            outs = fn(st.data, st.norms, st.rec_dfs, st.rec_gid, st.count,
+                      self.tables, self.pivots, self.centroids, self.t_real,
+                      jnp.asarray(queries, jnp.float32),
+                      jnp.asarray(routed, bool))
+            return tuple(np.asarray(o) for o in outs)
 
     # ------------------------------------------------------------------
     # refine-only fan-out (host-computed / cache-replayed plans)
@@ -309,28 +317,30 @@ class MeshFleetPlacement:
             # data: [per, P, cap, n] — this device's resident shards;
             # sp/lo/hi: [per, Q, MP] — their (routing-masked) plans.
             local_d, local_g = [], []
-            for j in range(per):                     # static unroll
-                st = PartitionStore(data=data[j], norms=norms[j],
-                                    rec_dfs=rdfs[j], rec_gid=rgid[j],
-                                    count=count[j])
-                d, g = refine(st, q, sp[j], lo[j], hi[j], k,
-                              use_kernel=use_kernel)
-                local_d.append(d)
-                local_g.append(g)
-            d_loc = jnp.stack(local_d)               # [per, Q, k]
-            g_loc = jnp.stack(local_g)
-            # one collective: every device sees every shard's local top-k
-            d_all = jax.lax.all_gather(d_loc, axis, axis=0)  # [D, per, Q, k]
-            g_all = jax.lax.all_gather(g_loc, axis, axis=0)
-            d_all = d_all.reshape(s_pad, *d_loc.shape[1:])   # shard order
-            g_all = g_all.reshape(s_pad, *g_loc.shape[1:])
-            # fold in global shard order — the host loop's merge order, so
-            # results (incl. tie-breaks) are bit-identical to the oracle
-            best_d = jnp.full(d_loc.shape[1:], PAD_DIST, jnp.float32)
-            best_g = jnp.full(g_loc.shape[1:], -1, jnp.int32)
-            for s in range(s_pad):
-                best_d, best_g = merge_topk(best_d, best_g,
-                                            d_all[s], g_all[s], k)
+            with jax.named_scope("climber.refine"):
+                for j in range(per):                 # static unroll
+                    st = PartitionStore(data=data[j], norms=norms[j],
+                                        rec_dfs=rdfs[j], rec_gid=rgid[j],
+                                        count=count[j])
+                    d, g = refine(st, q, sp[j], lo[j], hi[j], k,
+                                  use_kernel=use_kernel)
+                    local_d.append(d)
+                    local_g.append(g)
+            with jax.named_scope("climber.merge"):
+                d_loc = jnp.stack(local_d)           # [per, Q, k]
+                g_loc = jnp.stack(local_g)
+                # one collective: every device sees every shard's top-k
+                d_all = jax.lax.all_gather(d_loc, axis, axis=0)
+                g_all = jax.lax.all_gather(g_loc, axis, axis=0)
+                d_all = d_all.reshape(s_pad, *d_loc.shape[1:])  # shard order
+                g_all = g_all.reshape(s_pad, *g_loc.shape[1:])
+                # fold in global shard order — the host loop's merge order,
+                # so results (incl. tie-breaks) are bit-identical
+                best_d = jnp.full(d_loc.shape[1:], PAD_DIST, jnp.float32)
+                best_g = jnp.full(g_loc.shape[1:], -1, jnp.int32)
+                for s in range(s_pad):
+                    best_d, best_g = merge_topk(best_d, best_g,
+                                                d_all[s], g_all[s], k)
             return best_d, best_g
 
         fn = shard_map(
@@ -367,9 +377,10 @@ class MeshFleetPlacement:
         if fn is None:
             fn = self._dispatch[key] = self._build_dispatch(k, use_kernel)
         st = self.store
-        d, g = fn(st.data, st.norms, st.rec_dfs, st.rec_gid, st.count,
-                  jnp.asarray(queries, jnp.float32),
-                  jnp.asarray(sel_part, jnp.int32),
-                  jnp.asarray(sel_lo, jnp.int32),
-                  jnp.asarray(sel_hi, jnp.int32))
-        return np.asarray(d), np.asarray(g)
+        with jax.profiler.TraceAnnotation("fleet.mesh.dispatch"):
+            d, g = fn(st.data, st.norms, st.rec_dfs, st.rec_gid, st.count,
+                      jnp.asarray(queries, jnp.float32),
+                      jnp.asarray(sel_part, jnp.int32),
+                      jnp.asarray(sel_lo, jnp.int32),
+                      jnp.asarray(sel_hi, jnp.int32))
+            return np.asarray(d), np.asarray(g)

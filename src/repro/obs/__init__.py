@@ -1,0 +1,20 @@
+"""Unified observability plane — registry, span tracer, exporters.
+
+One process-wide :class:`MetricsRegistry` (counters, gauges, log-bucketed
+histograms with exact-count p50/p95/p99), one :class:`SpanTracer`
+(context-manager spans with parent nesting in a bounded ring), and the
+exporters that read them back out (Prometheus text, JSONL event log,
+stable JSON snapshot).  The serving planes record into the module-level
+defaults ``REGISTRY`` / ``TRACER``; see docs/OBSERVABILITY.md for the
+span taxonomy and operator recipes.
+"""
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                REGISTRY)
+from repro.obs.tracer import Span, SpanTracer, TRACER
+from repro.obs.export import snapshot, spans_jsonl, to_prometheus
+from repro.obs.profile import device_trace, trace_annotation
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+           "Span", "SpanTracer", "TRACER",
+           "snapshot", "spans_jsonl", "to_prometheus",
+           "device_trace", "trace_annotation"]

@@ -1,0 +1,43 @@
+"""Opt-in device profiling — ``jax.profiler`` trace capture.
+
+The registry/tracer pair measures *host-side* wall time; what the device
+actually did inside the fused shard_map lives in the XLA trace.  The
+fused stages are wrapped in ``jax.named_scope`` (``climber.featurize`` /
+``climber.plan`` / ``climber.refine`` / ``climber.merge`` — see
+``repro.fleet.placement``) and the host-side dispatches carry
+``jax.profiler.TraceAnnotation`` markers, so a captured trace lines the
+two views up.
+
+Capture is strictly opt-in (profiling is not free):
+
+    with engine.capture_device_trace("/tmp/trace"):
+        engine.run(queries)
+
+then open the directory with TensorBoard's profile plugin or
+``xprof``.  See docs/OBSERVABILITY.md for the full how-to.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+__all__ = ["device_trace", "trace_annotation"]
+
+
+@contextmanager
+def device_trace(log_dir):
+    """Capture a ``jax.profiler`` trace of the enclosed block into
+    ``log_dir`` (created if missing).  Reentrant use raises — jax allows
+    one active trace per process."""
+    import jax
+    jax.profiler.start_trace(str(log_dir))
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+
+
+def trace_annotation(name: str):
+    """A ``jax.profiler.TraceAnnotation`` context manager (host-side
+    marker that shows up on captured device traces)."""
+    import jax
+    return jax.profiler.TraceAnnotation(name)

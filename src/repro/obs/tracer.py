@@ -1,0 +1,188 @@
+"""Low-overhead span tracer — nested wall-time spans in a bounded ring.
+
+A **span** is one named host-side wall-clock interval with parent/child
+nesting: the query path opens ``serve.tick → fleet.query → fleet.plan /
+fleet.refine / fleet.merge``, ingest opens ``fleet.insert → wal.append /
+delta.scatter``, and the background compactor (its own thread) opens
+``compact.seal → compact.build / compact.swap``.  Finished spans land in
+a bounded ring buffer (old spans fall off; tracing never grows without
+bound) and — when the tracer is bound to a
+:class:`~repro.obs.registry.MetricsRegistry` — each span's duration is
+observed into a ``span.<name>`` histogram, so every span family gets
+p50/p95/p99 for free.
+
+Nesting is thread-local: each thread keeps its own open-span stack, so
+the compaction worker's spans interleave with the serving thread's spans
+in the ring (ordered by end time) without ever corrupting either tree.
+A span's ``trace_id`` is the id of its thread's root span, which is what
+groups one query tick's tree back together.
+
+Overhead per span: two ``perf_counter`` calls, one dict, one deque
+append, one histogram observe — nanoseconds against the
+hundreds-of-microseconds stages it wraps (the bench-smoke acceptance
+budget is ≤5% on the fleet qps cell; measured well under).
+
+``TRACER`` is the process default, bound to the default registry.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import threading
+import time
+from collections import deque
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.obs.registry import REGISTRY, Histogram, MetricsRegistry
+
+__all__ = ["Span", "SpanTracer", "TRACER"]
+
+
+@dataclass
+class Span:
+    """One finished (or in-flight) named interval."""
+
+    name: str
+    span_id: int
+    parent_id: Optional[int]            # None for a root span
+    trace_id: int                       # span_id of the thread's root
+    start: float                        # perf_counter seconds
+    end: float = 0.0
+    wall_start: float = 0.0             # epoch seconds (for the event log)
+    thread: str = ""
+    attrs: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def duration_ms(self) -> float:
+        return (self.end - self.start) * 1e3
+
+    def to_dict(self) -> dict:
+        """JSON-ready view (one JSONL event-log line)."""
+        return {"name": self.name, "span_id": self.span_id,
+                "parent_id": self.parent_id, "trace_id": self.trace_id,
+                "ts": round(self.wall_start, 6),
+                "duration_ms": round(self.duration_ms, 6),
+                "thread": self.thread, "attrs": self.attrs}
+
+
+class SpanTracer:
+    """Context-manager spans, thread-local nesting, bounded ring buffer."""
+
+    def __init__(self, capacity: int = 4096,
+                 registry: Optional[MetricsRegistry] = None):
+        self.capacity = capacity
+        self.registry = registry
+        self._ring: deque = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+        self._ids = itertools.count(1)
+        self._local = threading.local()
+        self._hists: Dict[str, Histogram] = {}
+        self._jsonl = None                   # open file handle or None
+
+    # -- recording --------------------------------------------------------
+    def _stack(self) -> List[Span]:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    @contextmanager
+    def span(self, name: str, **attrs):
+        """Open a nested span; yields the live :class:`Span` (its
+        ``duration_ms`` is final after the block exits, so callers can
+        reuse the measurement instead of timing twice)."""
+        stack = self._stack()
+        sid = next(self._ids)
+        parent = stack[-1] if stack else None
+        sp = Span(name=name, span_id=sid,
+                  parent_id=parent.span_id if parent else None,
+                  trace_id=parent.trace_id if parent else sid,
+                  start=time.perf_counter(), wall_start=time.time(),
+                  thread=threading.current_thread().name, attrs=attrs)
+        stack.append(sp)
+        try:
+            yield sp
+        finally:
+            sp.end = time.perf_counter()
+            stack.pop()
+            self._finish(sp)
+
+    def _finish(self, sp: Span) -> None:
+        with self._lock:
+            self._ring.append(sp)
+            jsonl = self._jsonl
+        if self.registry is not None:
+            h = self._hists.get(sp.name)
+            if h is None:
+                h = self._hists[sp.name] = \
+                    self.registry.histogram(f"span.{sp.name}")
+            h.observe(sp.duration_ms)
+        if jsonl is not None:
+            line = json.dumps(sp.to_dict(), sort_keys=True)
+            with self._lock:
+                if self._jsonl is not None:
+                    self._jsonl.write(line + "\n")
+                    self._jsonl.flush()
+
+    # -- reading ----------------------------------------------------------
+    def spans(self) -> List[Span]:
+        """Snapshot of the ring, oldest-finished first."""
+        with self._lock:
+            return list(self._ring)
+
+    def roots(self) -> List[Span]:
+        return [s for s in self.spans() if s.parent_id is None]
+
+    def tree(self, trace_id: int) -> Optional[dict]:
+        """One trace as a nested dict: ``{"name", "duration_ms", "attrs",
+        "children": […]}`` — children ordered by start time.  None when
+        the trace (or its root) has fallen off the ring."""
+        spans = [s for s in self.spans() if s.trace_id == trace_id]
+        by_parent: Dict[Optional[int], List[Span]] = {}
+        for s in spans:
+            by_parent.setdefault(s.parent_id, []).append(s)
+
+        def build(sp: Span) -> dict:
+            kids = sorted(by_parent.get(sp.span_id, ()),
+                          key=lambda s: s.start)
+            return {"name": sp.name,
+                    "duration_ms": round(sp.duration_ms, 6),
+                    "attrs": sp.attrs,
+                    "children": [build(k) for k in kids]}
+
+        root = [s for s in spans if s.span_id == trace_id]
+        return build(root[0]) if root else None
+
+    def last_trace(self, name: Optional[str] = None) -> Optional[dict]:
+        """The most recent complete trace (optionally: whose root span is
+        named ``name``) as a nested tree."""
+        for root in reversed(self.roots()):
+            if name is None or root.name == name:
+                return self.tree(root.trace_id)
+        return None
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+
+    # -- structured event log --------------------------------------------
+    def attach_jsonl(self, path) -> None:
+        """Append every finished span to ``path`` as one JSON line each
+        (the structured event log exporters tail)."""
+        with self._lock:
+            if self._jsonl is not None:
+                self._jsonl.close()
+            self._jsonl = open(path, "a", encoding="utf-8")
+
+    def detach_jsonl(self) -> None:
+        with self._lock:
+            if self._jsonl is not None:
+                self._jsonl.close()
+                self._jsonl = None
+
+
+#: The process-wide default tracer, bound to the default registry (every
+#: span family gets a ``span.<name>`` latency histogram automatically).
+TRACER = SpanTracer(registry=REGISTRY)

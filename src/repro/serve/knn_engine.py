@@ -39,7 +39,9 @@ them into the queries/sec numbers the benchmarks report.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
+import weakref
 from collections import OrderedDict
 from typing import List, Optional, Tuple
 
@@ -51,6 +53,10 @@ from repro.core.index import ClimberIndex
 from repro.core.query import candidates_scanned, default_slot_budget, \
     get_planner, plan as plan_queries
 from repro.core.refine import dispatch_refine, resolve_use_kernel
+from repro.obs import REGISTRY, TRACER
+
+# distinguishes each serving loop's metric series in the process registry
+_LOOP_SEQ = itertools.count()
 
 
 class PlanCache:
@@ -112,6 +118,7 @@ class QueryRequest:
     gid: Optional[np.ndarray] = None         # [k] record ids (−1 pad)
     metrics: Optional["QueryMetrics"] = None
     done: bool = False
+    submitted_at: Optional[float] = None     # perf_counter at admission
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,6 +194,40 @@ class BatchedServingLoop:
         self.k = k
         self.queue: List[QueryRequest] = []
         self.stats = EngineStats()
+        # registry wiring: per-instance label so concurrent loops (and
+        # benchmark cells building fresh engines) keep distinct series
+        self.obs_label = f"{type(self).__name__.lower()}{next(_LOOP_SEQ)}"
+        self.latency_hist = REGISTRY.histogram("serve.latency_ms",
+                                               loop=self.obs_label)
+        self.queue_gauge = REGISTRY.gauge("serve.queue_depth",
+                                          loop=self.obs_label)
+        # pull-based stats exposure: the collector holds only a weakref,
+        # so EngineStats keeps its exact dataclass shape (snapshot() keys
+        # are asserted by tier-1 tests) and dead loops unregister alone
+        ref = weakref.ref(self)
+
+        def _collect():
+            loop = ref()
+            if loop is None:
+                return None
+            s = loop.stats
+            return {"serve.queries": s.queries, "serve.ticks": s.ticks,
+                    "serve.queries_per_sec": s.queries_per_sec,
+                    "serve.plan_cache_hit_rate": s.plan_cache_hit_rate}
+
+        REGISTRY.add_collector(_collect, loop=self.obs_label)
+
+    def reset_metrics(self) -> None:
+        """Zero this loop's aggregate stats and latency histogram (the
+        benchmarks call it between warmup and the timed window)."""
+        self.stats = EngineStats()
+        self.latency_hist.reset()
+
+    def capture_device_trace(self, log_dir):
+        """Opt-in ``jax.profiler`` capture of everything this loop runs
+        inside the block (see :func:`repro.obs.profile.device_trace`)."""
+        from repro.obs import device_trace
+        return device_trace(log_dir)
 
     def _execute(self, qbatch: np.ndarray, nlive: int):
         raise NotImplementedError
@@ -210,7 +251,10 @@ class BatchedServingLoop:
             raise ValueError(f"request {req.rid}: k={req.k} exceeds the "
                              f"engine's static answer size k={self.k}")
         req.series = series
+        if req.submitted_at is None:
+            req.submitted_at = time.perf_counter()
         self.queue.append(req)
+        self.queue_gauge.set(len(self.queue))
 
     def step(self) -> int:
         """Serve one batch from the queue; returns #requests completed."""
@@ -223,9 +267,14 @@ class BatchedServingLoop:
             qbatch[i] = req.series
         # pop only after the tick succeeds: a device error leaves the
         # queue intact instead of dropping in-flight requests
-        dist, gid, touched, scanned, dt = self._execute(qbatch, len(live))
+        with TRACER.span("serve.tick", loop=self.obs_label,
+                         live=len(live)):
+            dist, gid, touched, scanned, dt = \
+                self._execute(qbatch, len(live))
         del self.queue[:len(live)]
+        self.queue_gauge.set(len(self.queue))
 
+        done_at = time.perf_counter()
         fill = len(live) / self.batch_size
         metrics = []
         for i, req in enumerate(live):
@@ -237,6 +286,10 @@ class BatchedServingLoop:
                 latency_s=dt, batch_fill=fill)
             req.done = True
             metrics.append(req.metrics)
+            # arrival-to-answer: queue wait + every tick that ran first
+            arrived = req.submitted_at if req.submitted_at is not None \
+                else done_at - dt
+            self.latency_hist.observe((done_at - arrived) * 1e3)
         self.stats.observe(metrics)
         self._after_tick()
         return len(live)
@@ -274,7 +327,12 @@ class BatchedServingLoop:
             if pad:
                 chunk = np.concatenate(
                     [chunk, np.zeros((pad, chunk.shape[1]), np.float32)])
-            dist, gid, touched, scanned, dt = self._execute(chunk, nlive)
+            with TRACER.span("serve.tick", loop=self.obs_label,
+                             live=nlive):
+                dist, gid, touched, scanned, dt = \
+                    self._execute(chunk, nlive)
+            for _ in range(nlive):           # direct API: no queue wait
+                self.latency_hist.observe(dt * 1e3)
             dists.append(dist[:nlive, :kq])
             gids.append(gid[:nlive, :kq])
             batch_metrics = [
@@ -400,12 +458,16 @@ class ClimberEngine(BatchedServingLoop):
         """One fixed-shape tick.  Returns host arrays + wall seconds."""
         t0 = time.perf_counter()
         qb = jnp.asarray(qbatch)
-        p4r = self._featurize(qb)
-        sel_part, sel_lo, sel_hi, touched, scanned = \
-            self._plan_batch(p4r, nlive)
-        dist, gid = self._refine(qb, jnp.asarray(sel_part),
-                                 jnp.asarray(sel_lo), jnp.asarray(sel_hi))
-        jax.block_until_ready(gid)
+        with TRACER.span("query.featurize"):
+            p4r = self._featurize(qb)
+        with TRACER.span("query.plan", variant=self.variant):
+            sel_part, sel_lo, sel_hi, touched, scanned = \
+                self._plan_batch(p4r, nlive)
+        with TRACER.span("query.refine"):
+            dist, gid = self._refine(qb, jnp.asarray(sel_part),
+                                     jnp.asarray(sel_lo),
+                                     jnp.asarray(sel_hi))
+            jax.block_until_ready(gid)
         dt = time.perf_counter() - t0
         return (np.asarray(dist), np.asarray(gid), np.asarray(touched),
                 np.asarray(scanned), dt)
