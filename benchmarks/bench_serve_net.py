@@ -1,0 +1,146 @@
+"""Network serving plane — qps + latency tails per client concurrency.
+
+Serves one small fleet through the asyncio :class:`ClimberServer` on a
+loopback socket and drives it with 1 / 4 / 16 concurrent client threads
+(each its own connection, pipelining its share of the query stream).  Per
+concurrency level the cell reports:
+
+  * ``queries_per_sec``  — completed round trips over wall time;
+  * ``latency_p50_ms`` / ``latency_p99_ms`` — the *server-side*
+    arrival-to-answer tails from the engine's ``serve.latency_ms``
+    registry histogram (the PR 7 observability plane), reset per level so
+    each cell sees only its own window;
+  * ``rtt_p50_ms`` / ``rtt_p99_ms`` — the *client-perceived* round-trip
+    tails from the ``net.rtt_ms`` histogram, same window;
+  * ``overlap_admissions`` — how many admissions landed while a tick was
+    executing: the double buffer visibly overlapping host assembly with
+    device execution.
+
+One warm-up batch per level excludes compilation from the window.  Writes
+``artifacts/BENCH_serve_net.json``; the bench-trend CI step diffs every
+column run over run.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import default_cfg, emit
+from repro.data import make_dataset
+from repro.fleet import FleetConfig, FleetEngine, IndexFleet
+from repro.obs import REGISTRY
+from repro.serve import api
+from repro.serve.net import ClimberClient, RetryLater, serve_in_thread
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+K = 10
+N = 4_000
+SERIES_LEN = 128
+SHARDS = 2
+BATCH_SIZE = 8
+NUM_QUERIES = 64                  # per concurrency level
+CONCURRENCY = (1, 4, 16)
+
+
+def _drive(port: int, series: np.ndarray, workers: int) -> int:
+    """Fan NUM_QUERIES over `workers` client connections; returns the
+    number of completed round trips (RetryLater rejections are retried —
+    the bench measures served throughput, not refusal throughput)."""
+    done = [0] * workers
+    chunks = np.array_split(series, workers)
+
+    def worker(widx: int) -> None:
+        with ClimberClient("127.0.0.1", port,
+                           client_name="bench") as client:
+            for q in chunks[widx]:
+                while True:
+                    try:
+                        client.query(q, k=K)
+                        break
+                    except RetryLater as exc:
+                        time.sleep(max(exc.retry_after_ms, 1.0) / 1e3)
+            done[widx] = len(chunks[widx])
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return sum(done)
+
+
+def run() -> None:
+    cfg = default_cfg(k=K)
+    data = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(0),
+                                   N, SERIES_LEN))
+    rng = np.random.default_rng(7)
+    queries = data[rng.integers(0, N, NUM_QUERIES)] + \
+        0.05 * rng.standard_normal((NUM_QUERIES, SERIES_LEN)).astype(
+            np.float32)
+
+    fleet = IndexFleet(FleetConfig(shard_cfg=cfg, fanout=1,
+                                   delta_capacity=1_024,
+                                   auto_compact=False))
+    per = N // SHARDS
+    for s in range(SHARDS):
+        fleet.add_shard(f"t{s}", data[s * per:(s + 1) * per])
+
+    engine = FleetEngine(fleet, config=api.ServingConfig(
+        batch_size=BATCH_SIZE, k=K, routing="signature",
+        admission_depth=2, max_pending=4 * BATCH_SIZE))
+    server, stop = serve_in_thread(engine)
+    rtt_hist = REGISTRY.histogram("net.rtt_ms", client="bench")
+    cells = []
+    try:
+        _drive(server.port, queries[:BATCH_SIZE], 1)      # compile warm-up
+        for workers in CONCURRENCY:
+            engine.latency_hist.reset()
+            rtt_hist.reset()
+            overlap0 = server.overlap_admissions
+            t0 = time.perf_counter()
+            served = _drive(server.port, queries, workers)
+            secs = time.perf_counter() - t0
+            qps = served / secs
+            p50 = engine.latency_hist.quantile(0.5)
+            p99 = engine.latency_hist.quantile(0.99)
+            rtt50 = rtt_hist.quantile(0.5)
+            rtt99 = rtt_hist.quantile(0.99)
+            overlap = server.overlap_admissions - overlap0
+            emit(f"serve_net/c{workers}", 1e6 / qps if qps else 0.0,
+                 f"qps={qps:.1f};p50={p50:.1f};p99={p99:.1f};"
+                 f"rtt_p50={rtt50:.1f};rtt_p99={rtt99:.1f};"
+                 f"overlap={overlap}")
+            cells.append({
+                "concurrency": workers,
+                "queries_per_sec": round(qps, 2),
+                "latency_p50_ms": round(p50, 3),
+                "latency_p99_ms": round(p99, 3),
+                "rtt_p50_ms": round(rtt50, 3),
+                "rtt_p99_ms": round(rtt99, 3),
+                "overlap_admissions": overlap,
+                "num_queries": NUM_QUERIES, "k": K,
+                "batch_size": BATCH_SIZE, "shards": SHARDS,
+            })
+    finally:
+        stop()
+
+    ART.mkdir(exist_ok=True)
+    out = ART / "BENCH_serve_net.json"
+    out.write_text(json.dumps({
+        "bench": "serve_net",
+        "dataset": {"name": "randomwalk", "n": N, "series_len": SERIES_LEN},
+        "batch_size": BATCH_SIZE,
+        "cells": cells,
+    }, indent=2))
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

@@ -40,10 +40,13 @@ METRICS = (
     "compaction_ms", "restart_replay_ms",       # fleet lifecycle columns
     "plan_ms", "refine_ms", "merge_ms",         # fleet per-stage breakdown
     "latency_p50_ms", "latency_p99_ms",         # obs histogram quantiles
+    "rtt_p50_ms", "rtt_p99_ms",                 # net client round-trip tails
+    "overlap_admissions",                       # double-buffer overlap count
 )
 # metrics where bigger is better (the rest are informational)
 HIGHER_IS_BETTER = {"queries_per_sec", "recall", "routing_precision"}
-DEFAULT_FILES = ("BENCH_query_engine.json", "BENCH_fleet.json")
+DEFAULT_FILES = ("BENCH_query_engine.json", "BENCH_fleet.json",
+                 "BENCH_serve_net.json")
 
 
 def _cell_key(cell: dict) -> Tuple:

@@ -25,6 +25,8 @@ SUITES = {
                "ClimberEngine queries/sec sweep"),
     "fleet": ("benchmarks.bench_fleet",
               "IndexFleet shards × routing × delta-fill sweep"),
+    "serve_net": ("benchmarks.bench_serve_net",
+                  "network serving plane qps + tails per concurrency"),
     "roofline": ("benchmarks.roofline", "§Roofline table from dry-run"),
 }
 

@@ -30,7 +30,7 @@ import numpy as np
 from repro.data import make_dataset, make_queries
 from repro.fleet import FleetConfig, FleetEngine, IndexFleet
 from repro.launch.mesh import make_mesh
-from repro.serve import QueryRequest
+from repro.serve import api
 from repro.utils.config import ClimberConfig
 
 
@@ -74,16 +74,15 @@ def main():
           f"{'mesh (%d devices)' % jax.device_count() if args.mesh else 'host'}")
 
     # serve a queue through one engine over the whole fleet
-    engine = FleetEngine(fleet, batch_size=args.batch_size, k=10,
-                         routing="signature")
-    reqs = [QueryRequest(rid=i, series=queries[i])
-            for i in range(args.requests)]
-    for req in reqs:
-        engine.submit(req)
+    engine = FleetEngine(fleet, config=api.ServingConfig(
+        batch_size=args.batch_size, k=10, routing="signature"))
+    tickets = [engine.submit_request(
+        api.QueryRequest(series=queries[i], request_id=i))
+        for i in range(args.requests)]
     engine.run_until_drained()
-    m = reqs[0].metrics
-    print(f"req 0: top-3 gids={reqs[0].gid[:3].tolist()} "
-          f"parts={m.partitions_touched} latency={m.latency_s*1e3:.1f}ms")
+    r0 = tickets[0].result
+    print(f"req 0: top-3 gids={r0.gid[:3].tolist()} "
+          f"parts={r0.partitions_touched} latency={r0.latency_ms:.1f}ms")
 
     # streaming ingest: fresh records are visible immediately
     fresh = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(9),
@@ -137,9 +136,18 @@ def main():
           f"(storage: {storage})")
 
     if args.metrics:
+        # run one short network-plane segment so the page includes the
+        # per-connection net.* counters and the client rtt histogram next
+        # to the span / engine metrics
+        from repro.serve.net import ClimberClient, serve_in_thread
+        server, stop = serve_in_thread(engine)
+        with ClimberClient("127.0.0.1", server.port) as client:
+            client.query_batch(list(queries[:4]), k=10)
+        stop()
         # everything above recorded into the process registry: spans into
-        # span.* histograms, fleet/engine counters via collectors — this is
-        # the page a Prometheus scrape of the process would return
+        # span.* histograms, fleet/engine counters via collectors, the net
+        # segment into net.* — this is the page a Prometheus scrape of the
+        # process would return
         from repro.obs import REGISTRY, to_prometheus
         print("\n# --- metrics (Prometheus text exposition) ---")
         print(to_prometheus(REGISTRY), end="")

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import build_index
 from repro.data import make_dataset, make_queries
-from repro.serve import ClimberEngine, QueryRequest
+from repro.serve import ClimberEngine, api
 from repro.utils.config import ClimberConfig
 
 
@@ -32,21 +32,20 @@ def main():
     queries = np.asarray(make_queries(jax.random.PRNGKey(2), data,
                                       args.requests))
 
-    engine = ClimberEngine(index, batch_size=args.batch_size,
-                           variant=args.variant, k=10)
-    reqs = [QueryRequest(rid=i, series=queries[i])
-            for i in range(args.requests)]
-    for req in reqs:
-        engine.submit(req)
+    engine = ClimberEngine(index, config=api.ServingConfig(
+        batch_size=args.batch_size, variant=args.variant, k=10))
+    tickets = [engine.submit_request(
+        api.QueryRequest(series=queries[i], request_id=i))
+        for i in range(args.requests)]
     engine.run_until_drained()
 
-    for req in reqs[:4]:
-        m = req.metrics
-        print(f"req {req.rid}: top-3 gids={req.gid[:3].tolist()} "
-              f"parts={m.partitions_touched} cands={m.candidates_scanned} "
-              f"latency={m.latency_s*1e3:.1f}ms fill={m.batch_fill:.2f}")
+    for t in tickets[:4]:
+        r = t.result
+        print(f"req {r.request_id}: top-3 gids={r.gid[:3].tolist()} "
+              f"parts={r.partitions_touched} cands={r.candidates_scanned} "
+              f"latency={r.latency_ms:.1f}ms fill={r.batch_fill:.2f}")
     s = engine.stats
-    assert all(req.done for req in reqs)
+    assert all(t.ok for t in tickets)
     print(f"OK — {s.queries} queries in {s.ticks} ticks: "
           f"{s.queries_per_sec:.1f} q/s, "
           f"mean parts={s.mean_partitions_touched:.2f}, "

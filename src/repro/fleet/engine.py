@@ -24,6 +24,7 @@ import numpy as np
 from repro.core.refine import PAD_DIST, resolve_use_kernel
 from repro.fleet.fleet import IndexFleet
 from repro.obs import TRACER
+from repro.serve import api
 from repro.serve.knn_engine import BatchedServingLoop
 
 
@@ -44,33 +45,49 @@ class FleetEngine(BatchedServingLoop):
         tick (0 = only when called explicitly).
       merge_policy: the :class:`~repro.fleet.lifecycle.merge.MergePolicy`
         maintenance applies (None = the fleet's / the policy defaults).
+
+    All of the above may instead arrive bundled in one
+    :class:`repro.serve.api.ServingConfig` via ``config=`` (exclusive
+    with the individual kwargs) — the same object ``ClimberEngine`` and
+    the network server consume; ``mesh`` / ``data_axis`` stay separate
+    runtime resources.
     """
 
-    def __init__(self, fleet: IndexFleet, *, batch_size: int = 8, k: int = 0,
-                 routing: str = "signature", variant: str = "adaptive",
-                 use_kernel: Optional[bool] = None,
-                 fanout: Optional[int] = None,
-                 mesh=None, data_axis: str = "data",
-                 placement: Optional[str] = None,
-                 maintenance_every: int = 0,
-                 merge_policy=None):
-        if routing not in ("signature", "exhaustive"):
-            raise ValueError(f"unknown routing mode {routing!r}")
+    _CONFIG_KEYS = ("batch_size", "k", "routing", "variant", "use_kernel",
+                    "fanout", "placement", "maintenance_every",
+                    "merge_policy")
+
+    def __init__(self, fleet: IndexFleet, *,
+                 config: Optional[api.ServingConfig] = None,
+                 mesh=None, data_axis: str = "data", **kwargs):
+        scfg = api.resolve_config(config, kwargs, self._CONFIG_KEYS)
+        self.config = scfg
+        if scfg.routing not in ("signature", "exhaustive"):
+            raise ValueError(f"unknown routing mode {scfg.routing!r}")
         if mesh is not None:
             fleet.attach_mesh(mesh, data_axis=data_axis)
-        fleet._resolve_placement(placement)   # fail fast on bad placements
+        fleet._resolve_placement(scfg.placement)  # fail fast when bad
         cfg = fleet.cfg.shard_cfg
-        super().__init__(series_len=cfg.series_len, batch_size=batch_size,
-                         k=k or cfg.k)
+        super().__init__(series_len=cfg.series_len,
+                         batch_size=scfg.batch_size, k=scfg.k or cfg.k)
         self.fleet = fleet
-        self.routing = routing
-        self.variant = variant
-        self.use_kernel = resolve_use_kernel(use_kernel)
-        self.fanout = fanout
-        self.placement = placement
-        self.maintenance_every = maintenance_every
-        self.merge_policy = merge_policy
+        self.routing = scfg.routing
+        self.variant = scfg.variant
+        self.use_kernel = resolve_use_kernel(scfg.use_kernel)
+        self.fanout = scfg.fanout
+        self.placement = scfg.placement
+        self.maintenance_every = scfg.maintenance_every
+        self.merge_policy = scfg.merge_policy
         self.last_maintenance: dict = {"retired": [], "merged": []}
+
+    def tenant_load(self, tenant: str) -> float:
+        """The tenant's share of the fleet's per-shard query load —
+        ``FleetStats.per_shard_queries[tenant]`` over the total — the
+        signal the net server's hot-tenant quota guard rides on.
+        Unknown tenants (or an unqueried fleet) report 0.0."""
+        loads = self.fleet.stats.per_shard_queries
+        total = sum(loads.values())
+        return loads.get(tenant, 0) / total if total else 0.0
 
     def reset_metrics(self) -> None:
         """Zero both the loop's and the underlying fleet's metrics."""

@@ -1,3 +1,6 @@
+from repro.serve import api
+from repro.serve.api import ErrorReply, QueryResult, ServerInfo, ServingConfig
 from repro.serve.engine import Engine, Request
 from repro.serve.knn_engine import (BatchedServingLoop, ClimberEngine,
-                                    EngineStats, QueryMetrics, QueryRequest)
+                                    EngineStats, QueryMetrics, QueryRequest,
+                                    QueryTicket)

@@ -40,10 +40,12 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
+import warnings
 import weakref
 from collections import OrderedDict
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,9 +56,13 @@ from repro.core.query import candidates_scanned, default_slot_budget, \
     get_planner, plan as plan_queries
 from repro.core.refine import dispatch_refine, resolve_use_kernel
 from repro.obs import REGISTRY, TRACER
+from repro.serve import api
 
 # distinguishes each serving loop's metric series in the process registry
 _LOOP_SEQ = itertools.count()
+
+# the mutable-QueryRequest adapter warns once per process, not per call
+_LEGACY_SUBMIT_WARNED = False
 
 
 class PlanCache:
@@ -109,7 +115,17 @@ class PlanCache:
 
 @dataclasses.dataclass
 class QueryRequest:
-    """One kNN request: a raw series in, (dist, gid) + metrics out."""
+    """One kNN request: a raw series in, (dist, gid) + metrics out.
+
+    .. deprecated::
+        This is the *mutable* legacy request the engine writes answers
+        back into.  New code should submit the frozen
+        :class:`repro.serve.api.QueryRequest` via
+        :meth:`BatchedServingLoop.submit_request` and read the immutable
+        :class:`repro.serve.api.QueryResult` off the returned
+        :class:`QueryTicket`.  ``submit`` keeps accepting this class
+        through a thin adapter (one-time ``DeprecationWarning``).
+    """
 
     rid: int
     series: np.ndarray                       # [n] raw query series
@@ -119,6 +135,36 @@ class QueryRequest:
     metrics: Optional["QueryMetrics"] = None
     done: bool = False
     submitted_at: Optional[float] = None     # perf_counter at admission
+
+
+class QueryTicket:
+    """One in-flight admission: a frozen :class:`repro.serve.api.
+    QueryRequest` paired with its eventual outcome.
+
+    ``result`` becomes an :class:`repro.serve.api.QueryResult` on
+    success or an :class:`repro.serve.api.ErrorReply` on failure; ``done``
+    flips atomically last.  Tickets are what the queue, the network
+    server's admission buffers, and the executor hand around — the frozen
+    request is never mutated.
+    """
+
+    __slots__ = ("request", "series", "result", "done", "submitted_at",
+                 "legacy", "conn")
+
+    def __init__(self, request: api.QueryRequest, series: np.ndarray,
+                 submitted_at: Optional[float] = None):
+        self.request = request
+        self.series = series               # validated float32 [n] view
+        self.result = None                 # QueryResult | ErrorReply
+        self.done = False
+        self.submitted_at = submitted_at \
+            if submitted_at is not None else time.perf_counter()
+        self.legacy: Optional[QueryRequest] = None   # write-back adapter
+        self.conn = None                   # net server's delivery handle
+
+    @property
+    def ok(self) -> bool:
+        return self.done and isinstance(self.result, api.QueryResult)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,8 +238,12 @@ class BatchedServingLoop:
         self.series_len = series_len
         self.batch_size = batch_size
         self.k = k
-        self.queue: List[QueryRequest] = []
+        self.queue: List[QueryTicket] = []
         self.stats = EngineStats()
+        # per-tenant in-flight admissions (the net server's quota hook);
+        # finish/fail run on the executor thread, so counts take a lock
+        self._tenant_lock = threading.Lock()
+        self._tenant_inflight: Dict[str, int] = {}
         # registry wiring: per-instance label so concurrent loops (and
         # benchmark cells building fresh engines) keep distinct series
         self.obs_label = f"{type(self).__name__.lower()}{next(_LOOP_SEQ)}"
@@ -238,33 +288,171 @@ class BatchedServingLoop:
         override it: the fleet engine runs its lifecycle maintenance here
         (compaction triggers, shard merge/retirement)."""
 
-    # -- request-queue serving -------------------------------------------
-    def submit(self, req: QueryRequest) -> None:
-        """Enqueue a request (rejects malformed ones before they can
-        poison a whole batch)."""
-        n = self.series_len
-        series = np.asarray(req.series, dtype=np.float32)
-        if series.shape != (n,):
-            raise ValueError(f"request {req.rid}: series shape "
-                             f"{series.shape} != ({n},)")
-        if req.k > self.k:
-            raise ValueError(f"request {req.rid}: k={req.k} exceeds the "
+    # -- typed admission ---------------------------------------------------
+    def validate_series(self, series, rid: int = 0) -> np.ndarray:
+        """The admission contract: a ``[series_len]`` float32 row or a
+        ValueError (so one bad series can't poison a whole batch)."""
+        series = np.asarray(series, dtype=np.float32)
+        if series.shape != (self.series_len,):
+            raise ValueError(f"request {rid}: series shape "
+                             f"{series.shape} != ({self.series_len},)")
+        return series
+
+    def validate_k(self, k: int, rid: int = 0) -> None:
+        if k > self.k:
+            raise ValueError(f"request {rid}: k={k} exceeds the "
                              f"engine's static answer size k={self.k}")
+
+    def make_ticket(self, req: api.QueryRequest) -> QueryTicket:
+        """Validate a frozen request into an in-flight ticket (counted
+        against its tenant's quota) without enqueueing it — the net
+        server's admission buffers own ticket placement themselves."""
+        series = self.validate_series(req.series, req.request_id)
+        self.validate_k(req.k, req.request_id)
+        ticket = QueryTicket(req, series)
+        with self._tenant_lock:
+            self._tenant_inflight[req.tenant] = \
+                self._tenant_inflight.get(req.tenant, 0) + 1
+        return ticket
+
+    def tenant_inflight(self, tenant: str) -> int:
+        """Admitted-but-unanswered requests of one tenant (quota hook)."""
+        with self._tenant_lock:
+            return self._tenant_inflight.get(tenant, 0)
+
+    def _release_tenant(self, ticket: QueryTicket) -> None:
+        with self._tenant_lock:
+            t = ticket.request.tenant
+            n = self._tenant_inflight.get(t, 0) - 1
+            if n > 0:
+                self._tenant_inflight[t] = n
+            else:
+                self._tenant_inflight.pop(t, None)
+
+    # -- request-queue serving -------------------------------------------
+    def submit_request(self, req: api.QueryRequest) -> QueryTicket:
+        """Enqueue a frozen :class:`repro.serve.api.QueryRequest`; the
+        returned ticket carries the :class:`repro.serve.api.QueryResult`
+        once a tick serves it."""
+        ticket = self.make_ticket(req)
+        self.queue.append(ticket)
+        self.queue_gauge.set(len(self.queue))
+        return ticket
+
+    def submit(self, req: QueryRequest) -> QueryTicket:
+        """Legacy adapter: enqueue a *mutable* :class:`QueryRequest`.
+
+        Deprecated (one-time warning): wraps the request into the typed
+        path and writes ``dist`` / ``gid`` / ``metrics`` / ``done`` back
+        into the caller's object when the tick completes, so existing
+        call sites keep working unchanged.
+        """
+        global _LEGACY_SUBMIT_WARNED
+        if not _LEGACY_SUBMIT_WARNED:
+            _LEGACY_SUBMIT_WARNED = True
+            warnings.warn(
+                "submit() with the mutable repro.serve.QueryRequest is "
+                "deprecated; use submit_request(repro.serve.api."
+                "QueryRequest) and read the ticket's QueryResult",
+                DeprecationWarning, stacklevel=2)
+        series = self.validate_series(req.series, req.rid)
+        self.validate_k(req.k, req.rid)
         req.series = series
         if req.submitted_at is None:
             req.submitted_at = time.perf_counter()
-        self.queue.append(req)
+        ticket = QueryTicket(
+            api.QueryRequest(series=series, k=req.k,
+                             request_id=req.rid),
+            series, submitted_at=req.submitted_at)
+        ticket.legacy = req
+        with self._tenant_lock:
+            self._tenant_inflight[""] = self._tenant_inflight.get("", 0) + 1
+        self.queue.append(ticket)
         self.queue_gauge.set(len(self.queue))
+        return ticket
+
+    def prepare_batch(self, tickets: List[QueryTicket]) -> np.ndarray:
+        """Assemble validated tickets into the one fixed batch shape —
+        featurize-ready, zero-padded — the executor jits against.  This
+        is the host half of double buffering: the net server assembles
+        batch N+1 here while the executor thread runs batch N."""
+        if len(tickets) > self.batch_size:
+            raise ValueError(f"{len(tickets)} tickets exceed "
+                             f"batch_size={self.batch_size}")
+        qbatch = np.zeros((self.batch_size, self.series_len),
+                          dtype=np.float32)
+        for i, t in enumerate(tickets):
+            qbatch[i] = t.series
+        return qbatch
+
+    def execute_prepared(self, qbatch: np.ndarray,
+                         tickets: List[QueryTicket]) -> int:
+        """Run one pre-assembled tick and complete its tickets.
+
+        The device half of double buffering: safe to call from a
+        dedicated executor thread while the event loop keeps admitting
+        into the next batch.  Raises whatever ``_execute`` raises — the
+        caller decides whether to fail the tickets
+        (:meth:`fail_tickets`) or retry.
+        """
+        with TRACER.span("serve.tick", loop=self.obs_label,
+                         live=len(tickets)):
+            dist, gid, touched, scanned, dt = \
+                self._execute(qbatch, len(tickets))
+        self._finish_batch(tickets, dist, gid, touched, scanned, dt)
+        self._after_tick()
+        return len(tickets)
+
+    def fail_tickets(self, tickets: List[QueryTicket],
+                     error: api.ErrorReply) -> None:
+        """Resolve tickets with a typed refusal (executor fault paths)."""
+        for t in tickets:
+            t.result = dataclasses.replace(
+                error, request_id=t.request.request_id)
+            self._release_tenant(t)
+            if t.legacy is not None:
+                t.legacy.done = True
+            t.done = True
+
+    def _finish_batch(self, tickets: List[QueryTicket], dist, gid,
+                      touched, scanned, dt: float) -> None:
+        """Complete tickets from one executed tick: typed results, the
+        legacy write-back adapter, latency histogram, aggregate stats."""
+        done_at = time.perf_counter()
+        fill = len(tickets) / self.batch_size
+        metrics = []
+        for i, t in enumerate(tickets):
+            req = t.request
+            kq = req.k or self.k
+            qm = QueryMetrics(partitions_touched=int(touched[i]),
+                              candidates_scanned=int(scanned[i]),
+                              latency_s=dt, batch_fill=fill)
+            # arrival-to-answer: queue wait + every tick that ran first
+            arrived = t.submitted_at if t.submitted_at is not None \
+                else done_at - dt
+            latency_ms = (done_at - arrived) * 1e3
+            t.result = api.QueryResult(
+                request_id=req.request_id,
+                dist=dist[i, :kq], gid=gid[i, :kq],
+                partitions_touched=qm.partitions_touched,
+                candidates_scanned=qm.candidates_scanned,
+                latency_ms=latency_ms, batch_fill=fill)
+            if t.legacy is not None:      # thin adapter: mutate in place
+                t.legacy.dist, t.legacy.gid = dist[i, :kq], gid[i, :kq]
+                t.legacy.metrics = qm
+                t.legacy.done = True
+            self._release_tenant(t)
+            t.done = True
+            metrics.append(qm)
+            self.latency_hist.observe(latency_ms)
+        self.stats.observe(metrics)
 
     def step(self) -> int:
         """Serve one batch from the queue; returns #requests completed."""
         if not self.queue:
             return 0
         live = self.queue[:min(self.batch_size, len(self.queue))]
-        qbatch = np.zeros((self.batch_size, self.series_len),
-                          dtype=np.float32)
-        for i, req in enumerate(live):
-            qbatch[i] = req.series
+        qbatch = self.prepare_batch(live)
         # pop only after the tick succeeds: a device error leaves the
         # queue intact instead of dropping in-flight requests
         with TRACER.span("serve.tick", loop=self.obs_label,
@@ -273,24 +461,7 @@ class BatchedServingLoop:
                 self._execute(qbatch, len(live))
         del self.queue[:len(live)]
         self.queue_gauge.set(len(self.queue))
-
-        done_at = time.perf_counter()
-        fill = len(live) / self.batch_size
-        metrics = []
-        for i, req in enumerate(live):
-            kq = req.k or self.k
-            req.dist, req.gid = dist[i, :kq], gid[i, :kq]
-            req.metrics = QueryMetrics(
-                partitions_touched=int(touched[i]),
-                candidates_scanned=int(scanned[i]),
-                latency_s=dt, batch_fill=fill)
-            req.done = True
-            metrics.append(req.metrics)
-            # arrival-to-answer: queue wait + every tick that ran first
-            arrived = req.submitted_at if req.submitted_at is not None \
-                else done_at - dt
-            self.latency_hist.observe((done_at - arrived) * 1e3)
-        self.stats.observe(metrics)
+        self._finish_batch(live, dist, gid, touched, scanned, dt)
         self._after_tick()
         return len(live)
 
@@ -368,30 +539,39 @@ class ClimberEngine(BatchedServingLoop):
       plan_cache_size: LRU capacity of the signature→plan cache (0 turns
         memoization off; the planning stage then runs every tick).
 
+    All of the above may instead arrive bundled in one
+    :class:`repro.serve.api.ServingConfig` via ``config=`` (exclusive
+    with the individual kwargs) — the same object the fleet engine and
+    the network server consume.  ``mesh`` / ``data_axis`` stay separate:
+    they are runtime resources, not serializable configuration.
+
     The configuration (variant, k, backend, budget, store layout) is baked
     into the compiled pipeline at construction; mutating these attributes
     afterwards has no effect on the cached trace — build a new engine
     instead.
     """
 
-    def __init__(self, index: ClimberIndex, *, batch_size: int = 8,
-                 variant: str = "adaptive", k: int = 0,
-                 use_kernel: Optional[bool] = None, mesh=None,
-                 data_axis: str = "data",
-                 max_slots: Optional[int] = None,
-                 plan_cache_size: int = 256):
-        get_planner(variant)                 # fail fast on unknown variants
+    _CONFIG_KEYS = ("batch_size", "variant", "k", "use_kernel",
+                    "max_slots", "plan_cache_size")
+
+    def __init__(self, index: ClimberIndex, *,
+                 config: Optional[api.ServingConfig] = None,
+                 mesh=None, data_axis: str = "data", **kwargs):
+        cfg = api.resolve_config(config, kwargs, self._CONFIG_KEYS)
+        self.config = cfg
+        get_planner(cfg.variant)             # fail fast on unknown variants
         super().__init__(series_len=index.cfg.series_len,
-                         batch_size=batch_size, k=k or index.cfg.k)
+                         batch_size=cfg.batch_size, k=cfg.k or index.cfg.k)
         self.index = index
-        self.variant = variant
-        self.use_kernel = resolve_use_kernel(use_kernel)
+        self.variant = cfg.variant
+        self.use_kernel = resolve_use_kernel(cfg.use_kernel)
         self.mesh = mesh
         self.data_axis = data_axis
+        max_slots = cfg.max_slots
         if max_slots is None:
             max_slots = index.cfg.query_max_slots
         if max_slots is None:
-            max_slots = default_slot_budget(index, variant)
+            max_slots = default_slot_budget(index, cfg.variant)
         self.max_slots = max_slots
 
         self.store = index.store
@@ -399,9 +579,9 @@ class ClimberEngine(BatchedServingLoop):
             from repro.distributed.store import shard_store
             self.store = shard_store(index.store, mesh, data_axis=data_axis)
 
-        self.plan_cache_size = plan_cache_size
+        self.plan_cache_size = cfg.plan_cache_size
         # signature bytes → (sel_part, sel_lo, sel_hi, touched, scanned) rows
-        self._plan_cache = PlanCache(plan_cache_size)
+        self._plan_cache = PlanCache(cfg.plan_cache_size)
 
         self._featurize = jax.jit(lambda q: self.index.featurize(q)[0])
         self._plan = jax.jit(self._plan_fn)

@@ -1,0 +1,7 @@
+from repro.serve.net.client import (AsyncClimberClient, ClimberClient,
+                                    RetryLater, ServerError)
+from repro.serve.net.codec import (FrameError, decode_payload, encode_frame,
+                                   encode_payload, read_frame,
+                                   read_frame_sync)
+from repro.serve.net.schema import MsgType, decode_message, encode_message
+from repro.serve.net.server import ClimberServer, serve_in_thread

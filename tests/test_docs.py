@@ -64,6 +64,22 @@ def test_architecture_covers_every_package():
     assert not missing, f"ARCHITECTURE.md does not mention: {missing}"
 
 
+def test_architecture_covers_every_serve_module():
+    """The serving plane now spans an API contract plus a network package;
+    every ``serve/**/*.py`` module must hold an owns-table row so the wire
+    schema and admission machinery stay documented as they grow."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    root = REPO / "src" / "repro" / "serve"
+    missing = []
+    for mod in sorted(root.rglob("*.py")):
+        if mod.name.startswith("_"):
+            continue
+        rel = mod.relative_to(root.parent)          # e.g. serve/net/codec.py
+        if str(rel) not in text:
+            missing.append(str(rel))
+    assert not missing, f"ARCHITECTURE.md owns-table misses: {missing}"
+
+
 def test_architecture_covers_every_fleet_module():
     """The fleet is the subsystem that grows module-by-module (placement,
     device planning, lifecycle…), so the owns-table must name every one of
