@@ -1,0 +1,74 @@
+"""Recall-frontier sweep — the Hydra-style accuracy measurement plane.
+
+Drives :func:`repro.eval.frontier.run_frontier` over tenant-sharded
+corpora (≥2 datasets × hard/easy query splits) and writes
+``artifacts/BENCH_recall_frontier.json``: per-cell recall@k / MAP /
+data-touched metrics across (shards × routing mode/fanout/threshold ×
+planner variant/spend × slot budget), the fixed-vs-adaptive frontier
+curves with AUC, and the ``routed_gap`` section — adaptive routing's
+recall against the fixed-fanout baseline *at matched candidates-scanned
+cost* (the apples-to-apples number the ROADMAP's recall program is judged
+on).
+
+Exact ground truth is cached under ``artifacts/gt_cache/`` keyed by the
+generating parameters, so repeat runs skip the brute-force scans.
+
+``--smoke`` (or ``RECALL_FRONTIER_SMOKE=1``, for the CI ``recall`` job)
+shrinks the sweep to one dataset, 2 shards, and 2 fanout points — a
+structural check, not a measurement — and skips the artifact write so a
+smoke run can never clobber the committed frontier.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.eval import FrontierSpec, run_frontier
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+FULL_SPEC = FrontierSpec()
+SMOKE_SPEC = FrontierSpec(
+    datasets=("randomwalk",), shard_counts=(2,), shard_size=300,
+    series_len=64, num_queries=12, num_calibration=8, k=5,
+    fanouts=(1, 2), thresholds=(0.5, 0.95), spend_factors=(1.0, 2.0),
+    slot_budgets=(4,))
+
+
+def run(smoke: bool = False) -> dict:
+    smoke = smoke or bool(os.environ.get("RECALL_FRONTIER_SMOKE"))
+    spec = SMOKE_SPEC if smoke else FULL_SPEC
+    doc = run_frontier(spec, cache_dir=None if smoke else ART / "gt_cache",
+                       progress=lambda msg: print(f"# {msg}"))
+    for c in doc["cells"]:
+        if "recall" not in c or c["split"] != "all":
+            continue
+        tag = (f"recall_frontier/{c['dataset']}/s{c['shards']}"
+               f"/{c['routing']}/{c['param']}/{c['variant']}")
+        emit(tag, 0.0,
+             f"recall={c['recall']:.3f};map={c['map']:.3f};"
+             f"scanned={c['mean_candidates_scanned']:.0f}")
+    for g in doc["routed_gap"]:
+        if g["split"] == "all":
+            emit(f"recall_frontier/gap/{g['dataset']}/s{g['shards']}"
+                 f"/{g['param']}", 0.0,
+                 f"adaptive={g['adaptive_recall']:.3f};"
+                 f"fixed_at_cost={g['fixed_recall_at_cost']:.3f};"
+                 f"improvement={g['improvement']:+.3f}")
+    if not smoke:
+        ART.mkdir(exist_ok=True)
+        out = ART / "BENCH_recall_frontier.json"
+        out.write_text(json.dumps(dict(doc, bench="recall_frontier"),
+                                  indent=2))
+        print(f"# wrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny structural sweep (no artifact write)")
+    run(smoke=ap.parse_args().smoke)

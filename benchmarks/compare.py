@@ -42,11 +42,13 @@ METRICS = (
     "latency_p50_ms", "latency_p99_ms",         # obs histogram quantiles
     "rtt_p50_ms", "rtt_p99_ms",                 # net client round-trip tails
     "overlap_admissions",                       # double-buffer overlap count
+    "map", "recall_frontier_auc",               # recall-frontier columns
 )
 # metrics where bigger is better (the rest are informational)
-HIGHER_IS_BETTER = {"queries_per_sec", "recall", "routing_precision"}
+HIGHER_IS_BETTER = {"queries_per_sec", "recall", "routing_precision",
+                    "map", "recall_frontier_auc"}
 DEFAULT_FILES = ("BENCH_query_engine.json", "BENCH_fleet.json",
-                 "BENCH_serve_net.json")
+                 "BENCH_serve_net.json", "BENCH_recall_frontier.json")
 
 
 def _cell_key(cell: dict) -> Tuple:

@@ -27,6 +27,8 @@ SUITES = {
               "IndexFleet shards × routing × delta-fill sweep"),
     "serve_net": ("benchmarks.bench_serve_net",
                   "network serving plane qps + tails per concurrency"),
+    "recall_frontier": ("benchmarks.bench_recall_frontier",
+                        "Hydra-style recall-vs-data-touched frontier"),
     "roofline": ("benchmarks.roofline", "§Roofline table from dry-run"),
 }
 

@@ -58,6 +58,7 @@ built-ins all do.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
@@ -68,6 +69,7 @@ from repro.core import assignment
 from repro.core.refine import dispatch_refine
 from repro.core.index import ClimberIndex, PartitionStore
 from repro.core.traversal import descend
+from repro.utils.config import ClimberConfig
 
 _BIG = jnp.float32(1e9)
 
@@ -441,6 +443,68 @@ register_device_planner("knn", plan_knn)
 register_device_planner("adaptive", plan_adaptive)
 register_device_planner("od_smallest", plan_od_smallest)
 register_device_planner("exhaustive", plan_exhaustive)
+
+
+# -- recall-targeted planning -------------------------------------------
+def _with_cfg(index, cfg: ClimberConfig):
+    """The same index/view with ``cfg`` swapped in.
+
+    Host indexes are dataclasses; the mesh path hands planners a
+    ``repro.fleet.device_plan.ShardView`` (a ``__slots__`` class), which is
+    rebuilt field-by-field instead.
+    """
+    import dataclasses as _dc
+    if _dc.is_dataclass(index):
+        return _dc.replace(index, cfg=cfg)
+    return type(index)(cfg, index.centroid_onehot, index.trie)
+
+
+def make_recall_target_planner(spend_factor: float) -> Planner:
+    """An adaptive-planner variant that spends ``spend_factor`` × more.
+
+    ``plan_adaptive`` expands memorised trie entries until their cumulative
+    size covers ``cfg.k`` records, bounded by ``adaptive_factor`` × the
+    partitions CLIMBER-kNN touches.  Scaling both knobs by ``spend_factor``
+    widens the coverage requirement *and* the cap together, so predicted
+    recall rises smoothly with spend (``repro.eval.target`` chooses the
+    factor from the live ``fleet.partitions_touched`` histogram against a
+    calibrated partitions→recall curve).  ``spend_factor == 1`` is
+    bit-identical to ``plan_adaptive``.
+
+    The returned planner is ctx-aware (same function for host and device
+    registration) and carries ``spend_factor`` as an attribute.
+    """
+    if spend_factor < 1.0:
+        raise ValueError(f"spend_factor must be >= 1, got {spend_factor}")
+
+    def planner(index, p4_rank_q: jnp.ndarray,
+                ctx: Optional[ShardPlanContext] = None) -> QueryPlan:
+        cfg = index.cfg
+        if spend_factor == 1.0:
+            return plan_adaptive(index, p4_rank_q, ctx)
+        boosted = cfg.replace(
+            k=int(math.ceil(cfg.k * spend_factor)),
+            adaptive_factor=int(math.ceil(cfg.adaptive_factor
+                                          * spend_factor)))
+        return plan_adaptive(_with_cfg(index, boosted), p4_rank_q, ctx)
+
+    planner.spend_factor = spend_factor
+    return planner
+
+
+def register_recall_target(spend_factor: float,
+                           name: str = "recall_target") -> Planner:
+    """Register a recall-targeted variant under ``name`` (host + device).
+
+    Re-registering the same name with a new factor replaces it — the fleet
+    must invalidate its plan caches afterwards (``IndexFleet`` keys cached
+    plans on the placement epoch; ``repro.eval.target.install_recall_target``
+    does the bump).
+    """
+    planner = make_recall_target_planner(spend_factor)
+    register_planner(name, planner)
+    register_device_planner(name, planner)
+    return planner
 
 
 def default_slot_budget(index: ClimberIndex,

@@ -1,5 +1,6 @@
 from repro.data.series import (GENERATORS, make_dataset, make_queries,
-                               random_walk, sift_like, dna_like, eeg_like)
+                               random_walk, sift_like, dna_like, eeg_like,
+                               seismic_like)
 
 __all__ = ["GENERATORS", "make_dataset", "make_queries", "random_walk",
-           "sift_like", "dna_like", "eeg_like"]
+           "sift_like", "dna_like", "eeg_like", "seismic_like"]

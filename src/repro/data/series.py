@@ -8,6 +8,9 @@
     mimicking the UCSC assembly conversion of [12].
   * EEG-like   — sums of band-limited sinusoids + noise (seizure EEG records
     are oscillatory).
+  * Seismic-like — AR(1)-correlated noise with sparse decaying-oscillation
+    bursts (the Hydra benchmarks' seismic records: long coloured-noise
+    stretches punctuated by event arrivals).
 
 All generators are deterministic in the PRNG key, jit-able, and emit float32
 ``[N, n]``.  Queries are drawn from the dataset itself, as in the paper
@@ -62,11 +65,38 @@ def eeg_like(key: jax.Array, num: int, length: int,
     return znormalize(jnp.sum(waves, axis=1) + noise)
 
 
+def seismic_like(key: jax.Array, num: int, length: int,
+                 corr: float = 0.97, num_events: int = 3) -> jnp.ndarray:
+    kn, kt, kf, ka = jax.random.split(key, 4)
+    # coloured background: white noise convolved with an AR(1) impulse
+    # response (geometric tail), the classic microseism spectrum shape
+    white = jax.random.normal(kn, (num, length), dtype=jnp.float32)
+    tail = corr ** jnp.arange(32, dtype=jnp.float32)
+    background = jax.vmap(
+        lambda s: jnp.convolve(s, tail, mode="same"))(white)
+    # sparse event arrivals: exponentially decaying sinusoid bursts at
+    # random onsets/frequencies (P/S-wave codas)
+    t = jnp.arange(length, dtype=jnp.float32)
+    onset = jax.random.uniform(kt, (num, num_events),
+                               maxval=0.8 * length)
+    freq = jax.random.uniform(kf, (num, num_events), minval=0.05,
+                              maxval=0.3)
+    amp = jax.random.uniform(ka, (num, num_events), minval=2.0, maxval=6.0)
+    dt = t[None, None, :] - onset[..., None]                # [N, E, n]
+    coda = jnp.where(dt >= 0,
+                     jnp.exp(-dt / 12.0) * jnp.sin(2 * jnp.pi
+                                                   * freq[..., None] * dt),
+                     0.0)
+    events = jnp.sum(amp[..., None] * coda, axis=1)
+    return znormalize(background + events)
+
+
 GENERATORS = {
     "randomwalk": random_walk,
     "sift": sift_like,
     "dna": dna_like,
     "eeg": eeg_like,
+    "seismic": seismic_like,
 }
 
 

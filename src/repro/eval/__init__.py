@@ -1,0 +1,36 @@
+"""Recall evaluation plane: Hydra-style accuracy measurement for the fleet.
+
+The CLIMBER++ headline claim is accuracy at scale; the two "Lernaean
+Hydra" evaluations (PAPERS.md) set the bar for *how* to measure it —
+multiple datasets, queries stratified by difficulty, and recall judged
+against the data each configuration actually touched (a frontier, not a
+point).  This package is that measurement plane:
+
+* :mod:`repro.eval.datasets` — seeded tenant-sharded corpora (per-shard
+  regimes, so routing has real signal) and hard/easy query splits
+  stratified by ground-truth contrast;
+* :mod:`repro.eval.ground_truth` — exact-kNN answers cached on disk,
+  keyed by the generating parameters (seed changes invalidate);
+* :mod:`repro.eval.metrics` — tie-aware recall@k, MAP, frontier AUC;
+* :mod:`repro.eval.frontier` — the sweep runner behind
+  ``benchmarks/bench_recall_frontier.py`` /
+  ``artifacts/BENCH_recall_frontier.json``;
+* :mod:`repro.eval.target` — recall-targeted planning: calibrate a
+  partitions→recall curve from frontier cells and install a
+  ``recall_target`` planner variant sized from the live
+  ``fleet.partitions_touched`` histogram.
+"""
+from repro.eval.datasets import (TenantCorpus, hardness_split,
+                                 perturbed_queries, tenant_corpus)
+from repro.eval.frontier import FrontierSpec, build_eval_fleet, run_frontier
+from repro.eval.ground_truth import GroundTruthCache
+from repro.eval.metrics import (frontier_auc, mean_average_precision,
+                                recall_at_k)
+from repro.eval.target import RecallCalibration, install_recall_target
+
+__all__ = [
+    "TenantCorpus", "tenant_corpus", "perturbed_queries", "hardness_split",
+    "GroundTruthCache", "recall_at_k", "mean_average_precision",
+    "frontier_auc", "FrontierSpec", "run_frontier", "build_eval_fleet",
+    "RecallCalibration", "install_recall_target",
+]

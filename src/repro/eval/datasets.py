@@ -1,0 +1,127 @@
+"""Seeded evaluation corpora: tenant-sharded datasets + stratified queries.
+
+Two things distinguish an honest routed-recall evaluation from a toy one:
+
+* **Shards must have structure.**  Slicing one iid dataset into S shards
+  puts every query's neighbours uniformly across all shards — no router
+  can beat random shard choice and routed recall is capped at
+  ``fanout / S`` regardless of algorithm.  Real fleets shard by tenant /
+  time range, where a shard's records share provenance.
+  :func:`tenant_corpus` reproduces that: each shard mixes a shard-specific
+  *motif* (a smooth random series, the "tenant regime") into its records
+  at ``affinity`` strength, so nearest neighbours concentrate in the
+  owning shard and signature routing has a real signal to learn.
+
+* **Queries must be stratified by difficulty.**  Mean recall over random
+  queries hides the tail; the Hydra evaluations split queries into hard /
+  easy by how contrasted the true answer is.  :func:`hardness_split` uses
+  the ground-truth **contrast ratio** ``d_2k / d_k`` — the gap between
+  the k-th neighbour and the next k.  A low ratio means many near-ties
+  just outside the answer set: exactly the queries approximate search
+  gets wrong first.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paa import znormalize
+from repro.data.series import GENERATORS
+
+__all__ = ["TenantCorpus", "tenant_corpus", "perturbed_queries",
+           "hardness_split"]
+
+
+@dataclass(frozen=True)
+class TenantCorpus:
+    """A sharded evaluation dataset with per-tenant structure."""
+
+    name: str                        # base generator name
+    shards: Tuple[np.ndarray, ...]   # per-tenant [n_i, n] float32 blocks
+    seed: int
+    affinity: float
+
+    @property
+    def union(self) -> np.ndarray:
+        return np.concatenate(self.shards, axis=0)
+
+    def meta(self) -> Dict:
+        """Identity of this corpus — keys the ground-truth cache."""
+        return {"name": self.name, "seed": self.seed,
+                "affinity": self.affinity,
+                "shard_sizes": [int(len(s)) for s in self.shards],
+                "series_len": int(self.shards[0].shape[1])}
+
+
+def _motif(key: jax.Array, length: int) -> jnp.ndarray:
+    """One tenant's regime: a smooth (random-walk) signature series."""
+    walk = jnp.cumsum(jax.random.normal(key, (length,)), axis=-1)
+    return znormalize(walk[None, :])[0]
+
+
+def tenant_corpus(name: str, *, num_shards: int, shard_size: int,
+                  series_len: int, seed: int = 0,
+                  affinity: float = 0.8) -> TenantCorpus:
+    """Build a per-tenant sharded corpus from base generator ``name``.
+
+    Each shard draws ``shard_size`` series from ``GENERATORS[name]`` under
+    its own subkey and mixes in the shard's motif at ``affinity`` (0 = iid
+    slicing, the router-hostile degenerate case; 1 = pure motif).  All
+    rows are re-z-normalised after mixing, so shards are comparable under
+    ED.
+    """
+    if name not in GENERATORS:
+        raise KeyError(f"unknown generator {name!r}; "
+                       f"have {sorted(GENERATORS)}")
+    root = jax.random.PRNGKey(seed)
+    shards: List[np.ndarray] = []
+    for i in range(num_shards):
+        kd, km = jax.random.split(jax.random.fold_in(root, i))
+        base = GENERATORS[name](kd, shard_size, series_len)
+        motif = _motif(km, series_len)
+        mixed = znormalize((1.0 - affinity) * base
+                           + affinity * motif[None, :])
+        shards.append(np.asarray(mixed, np.float32))
+    return TenantCorpus(name=name, shards=tuple(shards), seed=seed,
+                        affinity=affinity)
+
+
+def perturbed_queries(corpus: TenantCorpus, num_queries: int, *,
+                      noise: float = 0.05, seed: int = 0) -> np.ndarray:
+    """Queries near — not identical to — corpus rows (paper §VII-A draws
+    queries from the dataset; the perturbation keeps the true neighbour
+    non-trivial while preserving each query's tenant provenance)."""
+    union = corpus.union
+    key = jax.random.PRNGKey(seed ^ 0x5EED)
+    ki, kn = jax.random.split(key)
+    idx = np.asarray(jax.random.choice(ki, union.shape[0],
+                                       shape=(num_queries,), replace=False))
+    jitter = np.asarray(jax.random.normal(kn, (num_queries,
+                                               union.shape[1])))
+    q = union[idx] + noise * jitter
+    return np.asarray(znormalize(jnp.asarray(q)), np.float32)
+
+
+def hardness_split(exact_dist: np.ndarray, k: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Split query indices into (hard, easy) halves by answer contrast.
+
+    ``exact_dist`` is the ``[Q, >=2k]`` ascending true-distance matrix.
+    Contrast is ``d[2k-1] / d[k-1]`` (≥ 1): small means the true top-k is
+    barely separated from the next k — near-ties an approximate search
+    drops first.  The lower-contrast half is *hard*.  Deterministic
+    (stable argsort on the ratio, ties broken by index).
+    """
+    exact_dist = np.asarray(exact_dist)
+    if exact_dist.shape[1] < 2 * k:
+        raise ValueError(f"need >= 2k={2 * k} true distances per query, "
+                         f"got {exact_dist.shape[1]}")
+    dk = np.maximum(exact_dist[:, k - 1], 1e-12)
+    contrast = exact_dist[:, 2 * k - 1] / dk
+    order = np.argsort(contrast, kind="stable")
+    half = len(order) // 2
+    return order[:half], order[half:]

@@ -1,0 +1,76 @@
+"""Exact ground-truth caching for recall evaluation.
+
+Exact kNN over the corpus union is the one cost in the harness that
+dwarfs everything else and never changes for a fixed (corpus, queries, k)
+triple, so it is computed once and cached on disk.  The cache key is a
+content hash of the *generating parameters* (corpus meta + query spec +
+k), not the arrays — change any seed, size, or noise level and the key
+changes with it, so a stale truth can never be read back for a different
+dataset (tested).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.baselines.dss import exact_knn
+
+__all__ = ["GroundTruthCache"]
+
+
+class GroundTruthCache:
+    """Disk cache of exact kNN answers keyed by dataset identity."""
+
+    def __init__(self, cache_dir: Path):
+        self.cache_dir = Path(cache_dir)
+        self.cache_dir.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key_for(meta: Dict) -> str:
+        """Stable content hash of the generating parameters."""
+        blob = json.dumps(meta, sort_keys=True,
+                          separators=(",", ":")).encode()
+        return hashlib.sha1(blob).hexdigest()[:16]
+
+    def _path(self, key: str) -> Path:
+        return self.cache_dir / f"gt_{key}.npz"
+
+    def get(self, meta: Dict) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        p = self._path(self.key_for(meta))
+        if not p.exists():
+            return None
+        with np.load(p) as z:
+            self.hits += 1
+            return z["dist"], z["idx"]
+
+    def put(self, meta: Dict, dist: np.ndarray, idx: np.ndarray) -> None:
+        p = self._path(self.key_for(meta))
+        tmp = p.with_suffix(".tmp.npz")
+        np.savez(tmp, dist=dist, idx=idx,
+                 meta=json.dumps(meta, sort_keys=True))
+        tmp.replace(p)          # atomic: a reader never sees a half write
+
+    def exact(self, meta: Dict, queries: np.ndarray, data: np.ndarray,
+              k: int, *, chunk: int = 2048
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """Cached exact kNN: ``(dist [Q, k] ascending, idx [Q, k])``.
+
+        ``meta`` must uniquely describe ``(queries, data, k)`` — the
+        caller passes the corpus/query generating parameters, and ``k``
+        is folded in here.
+        """
+        full_meta = dict(meta, k=int(k))
+        cached = self.get(full_meta)
+        if cached is not None:
+            return cached
+        self.misses += 1
+        dist, idx = exact_knn(queries, data, k, chunk=chunk)
+        dist, idx = np.asarray(dist), np.asarray(idx)
+        self.put(full_meta, dist, idx)
+        return dist, idx

@@ -34,7 +34,9 @@ class FleetEngine(BatchedServingLoop):
     Args:
       fleet: the IndexFleet to serve (may keep ingesting between ticks —
         the fleet query path always sees the current shard set + delta).
-      routing: ``"signature"`` (router fan-out) or ``"exhaustive"``.
+      routing: ``"signature"`` (top-``fanout`` router fan-out),
+        ``"adaptive"`` (per-query score-mass fan-out), or
+        ``"exhaustive"``.
       variant: per-shard planner variant.
       mesh: attach a device mesh to the fleet (shorthand for
         ``fleet.attach_mesh``) so sealed shards execute mesh-resident.
@@ -62,7 +64,7 @@ class FleetEngine(BatchedServingLoop):
                  mesh=None, data_axis: str = "data", **kwargs):
         scfg = api.resolve_config(config, kwargs, self._CONFIG_KEYS)
         self.config = scfg
-        if scfg.routing not in ("signature", "exhaustive"):
+        if scfg.routing not in ("signature", "adaptive", "exhaustive"):
             raise ValueError(f"unknown routing mode {scfg.routing!r}")
         if mesh is not None:
             fleet.attach_mesh(mesh, data_axis=data_axis)

@@ -124,6 +124,9 @@ class FleetConfig:
 
     shard_cfg: ClimberConfig
     fanout: int = 2                 # shards the router selects per query
+    routing_threshold: float = 0.85  # score-mass cut for routing="adaptive"
+                                     # (overridden by a learned
+                                     # router.threshold or a per-call arg)
     delta_capacity: int = 4096      # records the delta holds before sealing
     delta_pad: Optional[int] = None  # physical slots per delta partition
                                      # (None => shard_cfg.capacity — full
@@ -433,6 +436,13 @@ class IndexFleet:
                                              fleet=self.obs_label)
         self.compaction_hist = REGISTRY.histogram("fleet.compaction_ms",
                                                   fleet=self.obs_label)
+        # per-query partitions-touched distribution: the live signal the
+        # recall-targeted planner calibrates against (repro.eval.target)
+        self.touched_hist = REGISTRY.histogram("fleet.partitions_touched",
+                                               fleet=self.obs_label)
+        # (scores, true-hit counts) pairs recorded by audit_routing(...,
+        # record=True); SignatureRouter.learn_threshold consumes them
+        self.routing_traces: List[Tuple[np.ndarray, np.ndarray]] = []
         ref = weakref.ref(self)
 
         def _collect():
@@ -461,6 +471,7 @@ class IndexFleet:
             self._refresh_gauges()
         self.query_hist.reset()
         self.compaction_hist.reset()
+        self.touched_hist.reset()
 
     # -- mesh placement ---------------------------------------------------
     def attach_mesh(self, mesh, *, data_axis: str = "data") -> None:
@@ -1191,6 +1202,7 @@ class IndexFleet:
               routing: str = "signature", variant: str = "adaptive",
               use_kernel: Optional[bool] = None,
               fanout: Optional[int] = None,
+              threshold: Optional[float] = None,
               placement: Optional[str] = None
               ) -> Tuple[np.ndarray, np.ndarray, FleetQueryInfo]:
         """Fan out, per-shard kNN, fuse with ``merge_topk``.
@@ -1199,8 +1211,16 @@ class IndexFleet:
           queries: ``[Q, n]`` raw query series.
           k: answer size (0 ⇒ ``shard_cfg.k``).
           routing: ``"signature"`` routes each query to the ``fanout``
-            best-scoring sealed shards; ``"exhaustive"`` executes every
-            shard (lossless fan-out).  The delta is always executed.
+            best-scoring sealed shards; ``"adaptive"`` sizes the fan-out
+            per query by score mass (``SignatureRouter.route_adaptive`` —
+            ``threshold`` arg, else the router's learned threshold, else
+            ``cfg.routing_threshold``; ``fanout`` then acts as a per-query
+            cap); ``"exhaustive"`` executes every shard (lossless
+            fan-out).  The delta is always executed.
+          threshold: adaptive-routing score-mass cut for this call
+            (ignored by the other routing modes).  ``>= 1.0`` is
+            bit-identical to exhaustive routing; ``<= 0.0`` degrades to
+            top-1.
           variant: per-shard planner variant; ``"exhaustive"`` makes each
             shard exact, so exhaustive routing + exhaustive variant equals
             brute-force over the fleet contents.
@@ -1225,7 +1245,7 @@ class IndexFleet:
           shards carry the :data:`repro.core.PAD_DIST` sentinel and
           ``gid = -1``.
         """
-        if routing not in ("signature", "exhaustive"):
+        if routing not in ("signature", "adaptive", "exhaustive"):
             raise ValueError(f"unknown routing mode {routing!r}")
         placement = self._resolve_placement(placement)
         queries = np.asarray(queries, dtype=np.float32)
@@ -1262,6 +1282,14 @@ class IndexFleet:
                 # mask width always matches the captured shard list
                 if routing == "exhaustive" or self.router is None or s == 0:
                     mask = np.ones((qn, s), dtype=bool)
+                elif routing == "adaptive":
+                    th = threshold
+                    if th is None:
+                        th = self.router.threshold
+                    if th is None:
+                        th = self.cfg.routing_threshold
+                    mask = self.router.route_adaptive(
+                        queries, float(th), max_fanout=fanout)
                 else:
                     mask = self.router.route(queries,
                                              fanout or self.cfg.fanout)
@@ -1292,6 +1320,8 @@ class IndexFleet:
                     self.stats.exhaustive_pairs += qn * s
             stage["merge_ms"] += sp_mrg.duration_ms
         self.query_hist.observe(sp_root.duration_ms)
+        for t in touched:
+            self.touched_hist.observe(float(t))
         return best_d, best_g, FleetQueryInfo(
             partitions_touched=touched, candidates_scanned=scanned,
             routed_mask=mask, lifecycle=lifecycle, stage_ms=stage,
@@ -1340,13 +1370,22 @@ class IndexFleet:
                                     use_kernel=use_kernel)
         return np.asarray(dist), np.asarray(gid)
 
+    MAX_ROUTING_TRACES = 4096       # bound on recorded audit traces
+
     def audit_routing(self, queries: np.ndarray, k: int = 0, *,
-                      variant: str = "adaptive") -> float:
+                      variant: str = "adaptive",
+                      record: bool = False) -> float:
         """Measure routed-mode precision against the exhaustive oracle.
 
         Returns the mean fraction of the exhaustive fan-out's answers the
         routed fan-out also returned, and folds it into
         ``stats.routing_precision``.
+
+        ``record=True`` additionally appends one ``(scores, true_hits)``
+        trace per query to ``self.routing_traces`` — the router's ``[S]``
+        shard scores and the count of the exhaustive answer's gids living
+        in each sealed shard.  :meth:`calibrate_routing` learns the
+        adaptive-routing threshold from these.
         """
         k = k or self.cfg.shard_cfg.k
         _, g_routed, _ = self.query(queries, k, routing="signature",
@@ -1363,7 +1402,33 @@ class IndexFleet:
         precision = float(np.mean(overlaps)) if overlaps else 1.0
         self.stats.routing_audits += 1
         self.stats.routing_overlap += precision
+        if record and self.router is not None and self.router.num_shards:
+            with self._lock:
+                gid_sets = [s.global_ids for s in self.shards]
+            scores = self.router.score(queries)            # [Q, S]
+            for i, gf in enumerate(g_full):
+                valid = gf[gf >= 0]
+                hits = np.array([int(np.isin(valid, g).sum())
+                                 for g in gid_sets], np.int64)
+                self.routing_traces.append((scores[i].copy(), hits))
+            del self.routing_traces[:-self.MAX_ROUTING_TRACES]
         return precision
+
+    def calibrate_routing(self, target_recall: float = 0.95) -> float:
+        """Learn the adaptive-routing threshold from recorded audit traces
+        (``audit_routing(..., record=True)``) and install it on the router.
+
+        Returns the learned threshold (also left on ``router.threshold``,
+        where ``routing="adaptive"`` picks it up by default).  Raises if
+        there is no router or no trace has been recorded.
+        """
+        if self.router is None:
+            raise RuntimeError("fleet has no router to calibrate")
+        if not self.routing_traces:
+            raise RuntimeError("no routing traces recorded — call "
+                               "audit_routing(..., record=True) first")
+        return self.router.learn_threshold(self.routing_traces,
+                                           target_recall=target_recall)
 
 
 def _recover_wal_rebase(storage_dir: Path) -> None:

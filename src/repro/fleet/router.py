@@ -16,6 +16,19 @@ lossless fallback — the Lernaean-Hydra lesson is that naive candidate
 pruning collapses recall, so the routed mode is always an explicit,
 measurable trade (``IndexFleet.audit_routing`` reports its precision
 against the exhaustive oracle).
+
+A global top-``fanout`` constant spends the same budget on every query,
+which is exactly what the Hydra evaluations show collapsing recall: easy
+queries waste fan-out while ambiguous ones are starved.
+:meth:`SignatureRouter.route_adaptive` instead selects, per query, the
+smallest score-ordered shard prefix covering a ``threshold`` fraction of
+the query's total score mass — confident queries route to one shard,
+ambiguous ones to many.  ``threshold → 0`` degrades to top-1 routing and
+``threshold >= 1`` is exactly exhaustive fan-out; the mask grows
+monotonically with the threshold in between (property-tested).  The
+threshold itself can be learned from ``IndexFleet.audit_routing`` traces
+via :meth:`learn_threshold` (smallest threshold whose predicted coverage
+of the true answers reaches a recall target).
 """
 from __future__ import annotations
 
@@ -42,6 +55,7 @@ class SignatureRouter:
                                       cfg.decay_lambda)
         self.keys: List[str] = []
         self._summaries: List[np.ndarray] = []     # each [r], L2-normalized
+        self.threshold: Optional[float] = None     # learned score-mass cut
 
     @classmethod
     def from_sample(cls, key: jax.Array, sample: np.ndarray,
@@ -113,3 +127,79 @@ class SignatureRouter:
         top = np.argpartition(-sc, fanout - 1, axis=-1)[:, :fanout]
         np.put_along_axis(mask, top, True, axis=-1)
         return mask
+
+    def route_adaptive(self, queries: np.ndarray, threshold: float, *,
+                       min_fanout: int = 1,
+                       max_fanout: Optional[int] = None,
+                       scores: Optional[np.ndarray] = None) -> np.ndarray:
+        """Boolean ``[Q, S]`` mask covering ``threshold`` of the score mass.
+
+        Shards are visited in descending score order and a query keeps
+        adding shards while the mass *before* the next shard is still below
+        ``threshold`` — so every query gets its best shard, a confident
+        query stops there, and an ambiguous one (flat scores) fans wide.
+
+        Contracts (property-tested):
+          * ``threshold >= 1.0`` → all-True, bit-identical to exhaustive.
+          * ``threshold <= 0.0`` → exactly the top-``min_fanout`` shards.
+          * the mask grows monotonically with ``threshold`` and is always
+            a superset of :meth:`route` at ``fanout=min_fanout``.
+          * ``max_fanout`` caps the per-query row sum when given.
+        """
+        s = self.num_shards
+        mask = np.zeros((len(queries), s), dtype=bool)
+        if s == 0:
+            return mask
+        if threshold >= 1.0 and max_fanout is None:
+            mask[:] = True                 # exhaustive short-circuit: no
+            return mask                    # float cumsum at the boundary
+        sc = self.score(queries) if scores is None else scores
+        sc = np.asarray(sc, dtype=np.float64)
+        order = np.argsort(-sc, axis=-1, kind="stable")   # ties → low index
+        # strictly positive mass keeps the prefix rule meaningful even for
+        # all-zero or negative score rows (degrades to uniform mass)
+        mass = np.take_along_axis(sc, order, axis=-1)
+        mass = np.maximum(mass - mass.min(axis=-1, keepdims=True), 0.0)
+        mass = mass + 1e-9
+        total = mass.sum(axis=-1, keepdims=True)
+        frac_before = (np.cumsum(mass, axis=-1) - mass) / total
+        rank = np.arange(s)[None, :]
+        sel = (frac_before < threshold) | (rank < max(1, min_fanout))
+        if max_fanout is not None:
+            sel &= rank < max_fanout
+        np.put_along_axis(mask, order, sel, axis=-1)
+        return mask
+
+    def learn_threshold(self, traces, target_recall: float = 0.95, *,
+                        grid: Optional[np.ndarray] = None) -> float:
+        """Fit the score-mass threshold from ``audit_routing`` traces.
+
+        ``traces`` is a sequence of ``(scores, true_hits)`` pairs — per
+        query, the router's ``[S]`` shard scores and the ``[S]`` count of
+        exhaustive-oracle answers living in each shard.  For each candidate
+        threshold the predicted recall is the fraction of true answers
+        inside the shards :meth:`route_adaptive` would select; the learned
+        threshold is the smallest one whose mean predicted recall reaches
+        ``target_recall`` (else the largest grid point).  Stored on
+        ``self.threshold`` and returned.
+        """
+        if grid is None:
+            grid = np.linspace(0.0, 1.0, 21)
+        traces = [(np.asarray(sc, np.float64), np.asarray(h, np.float64))
+                  for sc, h in traces]
+        traces = [(sc, h) for sc, h in traces if h.sum() > 0]
+        if not traces:
+            self.threshold = float(grid[-1])
+            return self.threshold
+        sc_all = np.stack([sc for sc, _ in traces])        # [T, S]
+        hits = np.stack([h for _, h in traces])            # [T, S]
+        best = float(grid[-1])
+        for th in grid:
+            m = self.route_adaptive(np.empty((len(sc_all), 0)), float(th),
+                                    scores=sc_all)
+            covered = (hits * m).sum(axis=-1) / hits.sum(axis=-1)
+            if float(covered.mean()) >= target_recall:
+                best = float(th)
+                break
+        self.threshold = best
+        return best

@@ -150,10 +150,13 @@ class ServingConfig:
 
     Fleet routing / upkeep (FleetEngine):
 
-      routing           "signature" (router fan-out) or "exhaustive"
+      routing           "signature" (top-``fanout`` router fan-out),
+                        "adaptive" (per-query score-mass fan-out, learned
+                        or configured threshold), or "exhaustive"
                         (lossless fallback).
-      fanout            shards the router selects per query; None = the
-                        fleet config's default.
+      fanout            shards the router selects per query (the per-query
+                        cap under "adaptive" routing); None = the fleet
+                        config's default.
       placement         sealed-shard execution: "host", "mesh", or None
                         for the fleet default (mesh when one is attached).
       maintenance_every run lifecycle maintenance after every Nth queue

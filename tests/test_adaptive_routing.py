@@ -1,0 +1,178 @@
+"""Adaptive-routing and recall-target parity acceptance tests.
+
+The accuracy story of the eval program rests on two degradation proofs:
+
+* ``routing="adaptive"`` at ``threshold=1`` is **bit-identical** to
+  ``routing="exhaustive"`` (distances *and* gids), on the host oracle and
+  on the mesh placement — widening the fan-out all the way recovers the
+  lossless answer, so any recall gap at lower thresholds is purely the
+  routing mask's doing;
+* the ``recall_target`` planner at ``spend_factor=1`` is bit-identical to
+  the stock ``adaptive`` planner — spending more is the *only* thing the
+  variant does.
+
+Plus the cheap end: ``threshold=0`` degrades to top-1 signature routing.
+"""
+import numpy as np
+import pytest
+
+from repro.core.query import register_recall_target
+from repro.data import make_dataset, make_queries
+from repro.fleet import FleetConfig, IndexFleet
+from repro.launch.mesh import make_mesh
+from repro.utils.config import ClimberConfig
+
+import jax
+import jax.numpy as jnp
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    cfg = ClimberConfig(series_len=64, paa_segments=8, num_pivots=32,
+                        prefix_len=5, capacity=128, sample_frac=0.3,
+                        max_centroids=12, k=K, candidate_groups=4,
+                        # factor 1: the partition cap binds, so boosting
+                        # spend measurably widens plans (spend-two test)
+                        adaptive_factor=1)
+    data = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(0),
+                                   1200, 64))
+    queries = np.asarray(make_queries(jax.random.PRNGKey(2),
+                                      jnp.asarray(data), 6))
+    # plan_cache_size=0: the cache keys on the variant *name*, and these
+    # tests re-register "recall_target" with different spend factors
+    fleet = IndexFleet(FleetConfig(shard_cfg=cfg, fanout=2,
+                                   auto_compact=False, plan_cache_size=0))
+    for i in range(3):
+        fleet.add_shard(f"t{i}", data[i * 400:(i + 1) * 400])
+    return fleet, queries
+
+
+class TestThresholdOneIsExhaustive:
+    def test_host_bit_identical(self, fleet_setup):
+        fleet, queries = fleet_setup
+        de, ge, ie = fleet.query(queries, K, routing="exhaustive",
+                                 placement="host")
+        da, ga, ia = fleet.query(queries, K, routing="adaptive",
+                                 threshold=1.0, placement="host")
+        np.testing.assert_array_equal(ge, ga)
+        np.testing.assert_array_equal(de, da)
+        assert ia.routed_mask.all()
+        np.testing.assert_array_equal(ie.candidates_scanned,
+                                      ia.candidates_scanned)
+
+    def test_mesh_bit_identical(self, fleet_setup):
+        fleet, queries = fleet_setup
+        fleet.attach_mesh(make_mesh((1,), ("data",)))
+        try:
+            de, ge, _ = fleet.query(queries, K, routing="exhaustive",
+                                    placement="mesh")
+            da, ga, ia = fleet.query(queries, K, routing="adaptive",
+                                     threshold=1.0, placement="mesh")
+            np.testing.assert_array_equal(ge, ga)
+            np.testing.assert_array_equal(de, da)
+            assert ia.routed_mask.all()
+        finally:
+            fleet.mesh = None
+            fleet._placement = None
+
+    def test_learned_threshold_of_one_also_exhaustive(self, fleet_setup):
+        """router.threshold=1 (no per-call override) takes the same path."""
+        fleet, queries = fleet_setup
+        fleet.router.threshold = 1.0
+        try:
+            de, ge, _ = fleet.query(queries, K, routing="exhaustive")
+            da, ga, _ = fleet.query(queries, K, routing="adaptive")
+            np.testing.assert_array_equal(ge, ga)
+            np.testing.assert_array_equal(de, da)
+        finally:
+            fleet.router.threshold = None
+
+
+class TestThresholdZeroIsTopOne:
+    def test_mask_degrades_to_top1(self, fleet_setup):
+        fleet, queries = fleet_setup
+        _, _, ia = fleet.query(queries, K, routing="adaptive",
+                               threshold=0.0)
+        _, _, i1 = fleet.query(queries, K, routing="signature", fanout=1)
+        assert (ia.routed_mask.sum(axis=1) == 1).all()
+        scores = fleet.router.score(queries)
+        unique = (scores == scores.max(axis=1, keepdims=True)) \
+            .sum(axis=1) == 1
+        np.testing.assert_array_equal(ia.routed_mask[unique],
+                                      i1.routed_mask[unique])
+
+    def test_results_match_top1(self, fleet_setup):
+        fleet, queries = fleet_setup
+        da, ga, _ = fleet.query(queries, K, routing="adaptive",
+                                threshold=0.0)
+        d1, g1, _ = fleet.query(queries, K, routing="signature", fanout=1)
+        scores = np.asarray(fleet.router.score(queries))
+        unique = (scores == scores.max(axis=1, keepdims=True)) \
+            .sum(axis=1) == 1
+        np.testing.assert_array_equal(ga[unique], g1[unique])
+        np.testing.assert_array_equal(da[unique], d1[unique])
+
+
+class TestRecallTargetParity:
+    def test_spend_one_is_stock_adaptive(self, fleet_setup):
+        fleet, queries = fleet_setup
+        register_recall_target(1.0)
+        da, ga, ia = fleet.query(queries, K, routing="exhaustive",
+                                 variant="adaptive")
+        dr, gr, ir = fleet.query(queries, K, routing="exhaustive",
+                                 variant="recall_target")
+        np.testing.assert_array_equal(ga, gr)
+        np.testing.assert_array_equal(da, dr)
+        np.testing.assert_array_equal(ia.candidates_scanned,
+                                      ir.candidates_scanned)
+
+    def test_spend_two_scans_at_least_as_much(self, fleet_setup):
+        fleet, queries = fleet_setup
+        register_recall_target(2.0)
+        _, _, ia = fleet.query(queries, K, routing="exhaustive",
+                               variant="adaptive")
+        _, _, ir = fleet.query(queries, K, routing="exhaustive",
+                               variant="recall_target")
+        assert (ir.candidates_scanned >= ia.candidates_scanned).all()
+        assert ir.candidates_scanned.sum() > ia.candidates_scanned.sum()
+
+    def test_mesh_matches_host(self, fleet_setup):
+        """The recall_target variant is registered for both planner
+        registries, so mesh execution stays bit-identical to the oracle."""
+        fleet, queries = fleet_setup
+        register_recall_target(2.0)
+        dh, gh, _ = fleet.query(queries, K, routing="exhaustive",
+                                variant="recall_target", placement="host")
+        fleet.attach_mesh(make_mesh((1,), ("data",)))
+        try:
+            dm, gm, _ = fleet.query(queries, K, routing="exhaustive",
+                                    variant="recall_target",
+                                    placement="mesh")
+            np.testing.assert_array_equal(gh, gm)
+            np.testing.assert_array_equal(dh, dm)
+        finally:
+            fleet.mesh = None
+            fleet._placement = None
+
+
+class TestCalibrationFlow:
+    def test_audit_record_and_calibrate(self, fleet_setup):
+        fleet, queries = fleet_setup
+        fleet.routing_traces.clear()
+        fleet.audit_routing(queries, K, record=True)
+        assert len(fleet.routing_traces) == len(queries)
+        th = fleet.calibrate_routing(target_recall=0.9)
+        assert 0.0 <= th <= 1.0
+        assert fleet.router.threshold == th
+        d, g, info = fleet.query(queries, K, routing="adaptive")
+        assert d.shape == (len(queries), K)
+        assert (info.routed_mask.sum(axis=1) >= 1).all()
+
+    def test_calibrate_without_traces_raises(self, fleet_setup):
+        fleet, _ = fleet_setup
+        fleet.routing_traces.clear()
+        fleet.router.threshold = None
+        with pytest.raises(RuntimeError):
+            fleet.calibrate_routing()

@@ -80,6 +80,22 @@ def test_architecture_covers_every_serve_module():
     assert not missing, f"ARCHITECTURE.md owns-table misses: {missing}"
 
 
+def test_architecture_covers_every_eval_module():
+    """The recall program is methodology: a new ``eval/*.py`` module means
+    a new measurement surface, and it must land with an owns-table row so
+    EVALUATION.md's claims stay traceable to code."""
+    text = (REPO / "docs" / "ARCHITECTURE.md").read_text()
+    root = REPO / "src" / "repro" / "eval"
+    missing = []
+    for mod in sorted(root.rglob("*.py")):
+        if mod.name.startswith("_"):
+            continue
+        rel = mod.relative_to(root.parent)          # e.g. eval/metrics.py
+        if str(rel) not in text:
+            missing.append(str(rel))
+    assert not missing, f"ARCHITECTURE.md owns-table misses: {missing}"
+
+
 def test_architecture_covers_every_fleet_module():
     """The fleet is the subsystem that grows module-by-module (placement,
     device planning, lifecycle…), so the owns-table must name every one of

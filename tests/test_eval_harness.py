@@ -1,0 +1,201 @@
+"""Eval-harness structure tests: corpora, hardness splits, the frontier
+runner's output document, and recall-target calibration."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import make_dataset, seismic_like
+from repro.eval import (FrontierSpec, RecallCalibration, hardness_split,
+                        install_recall_target, perturbed_queries,
+                        run_frontier, tenant_corpus)
+from repro.eval.frontier import build_eval_fleet
+
+SMOKE = FrontierSpec(
+    datasets=("randomwalk",), shard_counts=(2,), shard_size=250,
+    series_len=64, num_queries=10, num_calibration=6, k=4,
+    fanouts=(1,), thresholds=(0.5,), spend_factors=(1.0,),
+    slot_budgets=(1,))
+
+
+class TestSeismicGenerator:
+    def test_shape_dtype_normalization(self):
+        x = np.asarray(seismic_like(jax.random.PRNGKey(0), 8, 96))
+        assert x.shape == (8, 96) and x.dtype == np.float32
+        np.testing.assert_allclose(x.mean(axis=-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(x.std(axis=-1), 1.0, atol=1e-2)
+
+    def test_deterministic_in_key(self):
+        a = np.asarray(seismic_like(jax.random.PRNGKey(7), 4, 64))
+        b = np.asarray(seismic_like(jax.random.PRNGKey(7), 4, 64))
+        c = np.asarray(seismic_like(jax.random.PRNGKey(8), 4, 64))
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a, c)
+
+    def test_registered(self):
+        x = make_dataset("seismic", jax.random.PRNGKey(0), 4, 64)
+        assert x.shape == (4, 64)
+
+
+class TestTenantCorpus:
+    def test_shapes_and_meta(self):
+        c = tenant_corpus("randomwalk", num_shards=3, shard_size=100,
+                          series_len=64, seed=1, affinity=0.5)
+        assert len(c.shards) == 3
+        assert c.union.shape == (300, 64)
+        meta = c.meta()
+        assert meta["seed"] == 1 and meta["shard_sizes"] == [100] * 3
+
+    def test_shards_differ_and_are_deterministic(self):
+        a = tenant_corpus("randomwalk", num_shards=2, shard_size=50,
+                          series_len=64, seed=0)
+        b = tenant_corpus("randomwalk", num_shards=2, shard_size=50,
+                          series_len=64, seed=0)
+        np.testing.assert_array_equal(a.union, b.union)
+        assert not np.array_equal(a.shards[0], a.shards[1])
+
+    def test_affinity_concentrates_neighbours(self):
+        """With a strong tenant motif, a shard's rows are mutually closer
+        than rows across shards — the signal routing depends on."""
+        c = tenant_corpus("randomwalk", num_shards=2, shard_size=60,
+                          series_len=64, seed=0, affinity=0.8)
+        a, b = c.shards
+        within = np.linalg.norm(a[:20, None] - a[None, 20:40], axis=-1)
+        across = np.linalg.norm(a[:20, None] - b[None, :20], axis=-1)
+        assert within.mean() < across.mean()
+
+    def test_perturbed_queries_shape(self):
+        c = tenant_corpus("randomwalk", num_shards=2, shard_size=50,
+                          series_len=64)
+        q = perturbed_queries(c, 7, noise=0.1, seed=3)
+        assert q.shape == (7, 64) and q.dtype == np.float32
+
+
+class TestHardnessSplit:
+    def test_disjoint_cover_deterministic(self):
+        rng = np.random.default_rng(0)
+        dist = np.sort(rng.uniform(1, 10, size=(21, 8)), axis=-1)
+        hard, easy = hardness_split(dist, k=4)
+        again = hardness_split(dist, k=4)
+        assert set(hard) | set(easy) <= set(range(21))
+        assert len(set(hard) & set(easy)) == 0
+        assert len(hard) == 10 and len(easy) == 11
+        np.testing.assert_array_equal(hard, again[0])
+
+    def test_low_contrast_is_hard(self):
+        # query 0: d_k=1, d_2k=1.01 (near-tie => hard)
+        # query 1: d_k=1, d_2k=9    (contrasted => easy)
+        dist = np.array([[0.5, 1.0, 1.005, 1.01],
+                         [0.5, 1.0, 5.0, 9.0]])
+        hard, easy = hardness_split(dist, k=2)
+        assert list(hard) == [0] and list(easy) == [1]
+
+    def test_needs_2k_columns(self):
+        with pytest.raises(ValueError):
+            hardness_split(np.ones((4, 3)), k=2)
+
+
+class TestFrontierRunner:
+    @pytest.fixture(scope="class")
+    def doc(self):
+        return run_frontier(SMOKE)
+
+    def test_cells_cover_the_sweep(self, doc):
+        cells = doc["cells"]
+        routings = {c.get("routing") for c in cells if "routing" in c}
+        assert routings == {"exhaustive", "signature", "adaptive"}
+        splits = {c["split"] for c in cells if "split" in c}
+        assert splits == {"all", "hard", "easy"}
+        variants = {c.get("variant") for c in cells if "variant" in c}
+        assert "recall_target" in variants
+        budgets = {c["slot_budget"] for c in cells if "slot_budget" in c}
+        assert budgets == {0, 1}
+
+    def test_metric_ranges(self, doc):
+        for c in doc["cells"]:
+            if "recall" in c:
+                assert 0.0 <= c["recall"] <= 1.0
+                assert 0.0 <= c["map"] <= 1.0
+                assert c["mean_candidates_scanned"] >= 0
+
+    def test_frontiers_and_gap_sections(self, doc):
+        fr = doc["frontiers"]
+        assert {f["split"] for f in fr} == {"all", "hard", "easy"}
+        for f in fr:
+            assert 0.0 <= f["fixed_auc"] <= 1.0
+            assert 0.0 <= f["adaptive_auc"] <= 1.0
+            assert all(0 <= x <= 1 for x, _ in f["fixed"])
+        gap = doc["routed_gap"]
+        assert gap, "adaptive cells must produce matched-cost rows"
+        for g in gap:
+            assert g["improvement"] == pytest.approx(
+                g["adaptive_recall"] - g["fixed_recall_at_cost"])
+
+    def test_exhaustive_routing_is_the_scan_ceiling(self, doc):
+        """Exhaustive fan-out (same planner/budget) touches at least as
+        much data as any routed cell, and no cell exceeds the corpus."""
+        total = SMOKE.shard_counts[0] * SMOKE.shard_size
+        cells = [c for c in doc["cells"] if c.get("split") == "all"
+                 and c.get("slot_budget") == 0
+                 and c.get("variant") == "adaptive"]
+        exh = [c for c in cells if c["routing"] == "exhaustive"][0]
+        for c in cells:
+            assert c["mean_candidates_scanned"] \
+                <= exh["mean_candidates_scanned"]
+            assert c["mean_candidates_scanned"] <= total
+
+    def test_slot_budget_caps_partitions(self, doc):
+        """``query_max_slots=b`` compacts each shard's plan to at most
+        ``b`` partitions, so a query touches at most ``b * shards`` and
+        never scans more than the unbudgeted cell.  (Strict reduction
+        requires plans wider than the budget — the full-scale artifact
+        shows it; smoke plans are already ~1 slot per shard, so here the
+        budget must merely never hurt.)"""
+        full = [c for c in doc["cells"]
+                if c.get("routing") == "exhaustive"
+                and c["split"] == "all" and c["slot_budget"] == 0
+                and c["variant"] == "adaptive"][0]
+        tight = [c for c in doc["cells"]
+                 if c.get("slot_budget") == 1 and c["split"] == "all"][0]
+        budget, shards = SMOKE.slot_budgets[0], SMOKE.shard_counts[0]
+        assert tight["mean_partitions_touched"] <= budget * shards
+        assert tight["mean_candidates_scanned"] \
+            <= full["mean_candidates_scanned"]
+
+
+class TestRecallCalibration:
+    CELLS = [{"mean_partitions_touched": 2.0, "recall": 0.5},
+             {"mean_partitions_touched": 4.0, "recall": 0.8},
+             {"mean_partitions_touched": 8.0, "recall": 0.95}]
+
+    def test_monotone_envelope(self):
+        noisy = self.CELLS + [{"mean_partitions_touched": 6.0,
+                               "recall": 0.6}]       # dips below envelope
+        cal = RecallCalibration.from_cells(noisy)
+        assert list(cal.recalls) == sorted(cal.recalls)
+        assert cal.predict(3.0) == pytest.approx(0.65)
+        assert cal.predict(100.0) == pytest.approx(0.95)
+
+    def test_partitions_for_target(self):
+        cal = RecallCalibration.from_cells(self.CELLS)
+        assert cal.partitions_for(0.8) == 4.0
+        assert cal.partitions_for(0.99) == 8.0   # best available
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError):
+            RecallCalibration.from_cells([{"recall": 1.0}])
+
+    def test_install_on_live_fleet(self):
+        """install_recall_target sizes the spend from the fleet's live
+        partitions-touched histogram and registers the variant."""
+        corpus = tenant_corpus("randomwalk", num_shards=2, shard_size=200,
+                               series_len=64, seed=0)
+        fleet = build_eval_fleet(corpus, SMOKE)
+        q = perturbed_queries(corpus, 6, seed=1)
+        fleet.query(q, 4)                      # populate touched_hist
+        cal = RecallCalibration.from_cells(self.CELLS)
+        spend = install_recall_target(fleet, 0.95, cal, max_spend=8.0)
+        assert 1.0 <= spend <= 8.0
+        d, g, info = fleet.query(q, 4, variant="recall_target")
+        assert d.shape == (6, 4)

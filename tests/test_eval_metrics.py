@@ -1,0 +1,166 @@
+"""Recall-metric correctness: hand-computed fixtures, tie handling at the
+distance boundary, pad-sentinel exclusion, and ground-truth cache keying."""
+import numpy as np
+import pytest
+
+from repro.core.refine import PAD_DIST
+from repro.eval.ground_truth import GroundTruthCache
+from repro.eval.metrics import (frontier_auc, mean_average_precision,
+                                recall_at_k)
+
+
+class TestRecallAtK:
+    def test_hand_computed(self):
+        exact = np.array([[1, 2, 3, 4], [10, 11, 12, 13]])
+        approx = np.array([[1, 2, 9, 8], [10, 11, 12, 13]])
+        # query 0: 2/4 hits; query 1: 4/4 → mean 0.75
+        assert recall_at_k(approx, exact) == pytest.approx(0.75)
+
+    def test_k_prefix(self):
+        exact = np.array([[1, 2, 3, 4]])
+        approx = np.array([[1, 9, 3, 4]])
+        # only the first 2 columns: truth {1,2}, got {1,9} → 0.5
+        assert recall_at_k(approx, exact, k=2) == pytest.approx(0.5)
+
+    def test_pad_rows_excluded(self):
+        """gid=-1 pad slots count neither as hits nor as truth."""
+        exact = np.array([[1, 2, -1, -1]])
+        approx = np.array([[1, -1, -1, -1]])
+        # truth {1,2}, got {1} → 0.5 (pads on both sides ignored)
+        assert recall_at_k(approx, exact) == pytest.approx(0.5)
+
+    def test_all_pad_truth_skipped(self):
+        exact = np.array([[-1, -1], [1, 2]])
+        approx = np.array([[-1, -1], [1, 2]])
+        assert recall_at_k(approx, exact) == pytest.approx(1.0)
+
+    def test_tie_at_boundary_counts_as_hit(self):
+        """An id outside the oracle set but at the k-th distance is a hit:
+        the oracle's pick among equidistant records is arbitrary."""
+        exact_ids = np.array([[5, 6]])
+        exact_dist = np.array([[1.0, 2.0]])
+        approx_ids = np.array([[5, 7]])          # 7 ties the boundary
+        approx_dist = np.array([[1.0, 2.0]])
+        assert recall_at_k(approx_ids, exact_ids) == pytest.approx(0.5)
+        assert recall_at_k(approx_ids, exact_ids,
+                           approx_dist=approx_dist,
+                           exact_dist=exact_dist) == pytest.approx(1.0)
+
+    def test_beyond_boundary_is_a_miss(self):
+        exact_ids = np.array([[5, 6]])
+        exact_dist = np.array([[1.0, 2.0]])
+        approx_ids = np.array([[5, 7]])
+        approx_dist = np.array([[1.0, 2.5]])     # strictly worse: miss
+        assert recall_at_k(approx_ids, exact_ids,
+                           approx_dist=approx_dist,
+                           exact_dist=exact_dist) == pytest.approx(0.5)
+
+    def test_pad_dist_sentinel_rows_excluded_with_ties(self):
+        """PAD_DIST-carrying pad slots must not ride the tie rule."""
+        exact_ids = np.array([[5, 6]])
+        exact_dist = np.array([[1.0, 2.0]])
+        approx_ids = np.array([[5, -1]])
+        approx_dist = np.array([[1.0, PAD_DIST]])
+        assert recall_at_k(approx_ids, exact_ids,
+                           approx_dist=approx_dist,
+                           exact_dist=exact_dist) == pytest.approx(0.5)
+
+    def test_tie_hits_capped_at_truth_size(self):
+        """All-tied answers can't push recall above 1.0."""
+        exact_ids = np.array([[5, 6]])
+        exact_dist = np.array([[2.0, 2.0]])
+        approx_ids = np.array([[7, 8]])          # both tie the boundary
+        approx_dist = np.array([[2.0, 2.0]])
+        assert recall_at_k(approx_ids, exact_ids,
+                           approx_dist=approx_dist,
+                           exact_dist=exact_dist) == pytest.approx(1.0)
+
+
+class TestMeanAveragePrecision:
+    def test_perfect_ranking(self):
+        exact = np.array([[1, 2, 3]])
+        assert mean_average_precision(exact, exact) == pytest.approx(1.0)
+
+    def test_hand_computed(self):
+        exact = np.array([[1, 2, 3]])
+        approx = np.array([[9, 1, 2]])
+        # hits at ranks 2, 3: AP = (1/2 + 2/3) / 3
+        expected = (0.5 + 2.0 / 3.0) / 3.0
+        assert mean_average_precision(approx, exact) \
+            == pytest.approx(expected)
+
+    def test_order_sensitivity(self):
+        """Same set, true neighbours ranked later → lower MAP."""
+        exact = np.array([[1, 2]])
+        early = np.array([[1, 2, 8, 9]])
+        late = np.array([[8, 9, 1, 2]])
+        assert mean_average_precision(early, exact, k=4) \
+            > mean_average_precision(late, exact, k=4)
+
+    def test_pad_slots_do_not_occupy_ranks(self):
+        exact = np.array([[1, 2]])
+        padded = np.array([[-1, 1, 2]])
+        clean = np.array([[1, 2, -1]])
+        assert mean_average_precision(padded, exact, k=3) \
+            == pytest.approx(mean_average_precision(clean, exact, k=3))
+
+
+class TestFrontierAuc:
+    def test_empty(self):
+        assert frontier_auc([]) == 0.0
+
+    def test_single_point_holds_to_one(self):
+        assert frontier_auc([(0.5, 0.8)]) == pytest.approx(0.8)
+
+    def test_perfect_cheap_frontier(self):
+        assert frontier_auc([(0.1, 1.0), (1.0, 1.0)]) == pytest.approx(1.0)
+
+    def test_higher_curve_higher_auc(self):
+        low = [(0.2, 0.4), (0.6, 0.6), (1.0, 0.7)]
+        high = [(0.2, 0.6), (0.6, 0.8), (1.0, 0.9)]
+        assert frontier_auc(high) > frontier_auc(low)
+
+    def test_dedup_keeps_best_recall(self):
+        assert frontier_auc([(0.5, 0.2), (0.5, 0.9)]) == pytest.approx(0.9)
+
+
+class TestGroundTruthCache:
+    def test_roundtrip_and_hit_accounting(self, tmp_path):
+        cache = GroundTruthCache(tmp_path)
+        rng = np.random.default_rng(0)
+        data = rng.standard_normal((50, 16)).astype(np.float32)
+        queries = data[:4] + 0.01
+        meta = {"name": "unit", "seed": 0}
+        d1, i1 = cache.exact(meta, queries, data, 3)
+        assert cache.misses == 1 and cache.hits == 0
+        d2, i2 = cache.exact(meta, queries, data, 3)
+        assert cache.hits == 1
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_allclose(d1, d2)
+
+    def test_seed_change_invalidates(self, tmp_path):
+        """A different dataset seed must miss — never serve stale truth."""
+        cache = GroundTruthCache(tmp_path)
+        rng = np.random.default_rng(0)
+        data = rng.standard_normal((50, 16)).astype(np.float32)
+        queries = data[:4]
+        cache.exact({"name": "unit", "seed": 0}, queries, data, 3)
+        cache.exact({"name": "unit", "seed": 1}, queries, data, 3)
+        assert cache.misses == 2 and cache.hits == 0
+        assert GroundTruthCache.key_for({"name": "unit", "seed": 0}) \
+            != GroundTruthCache.key_for({"name": "unit", "seed": 1})
+
+    def test_k_is_part_of_the_key(self, tmp_path):
+        cache = GroundTruthCache(tmp_path)
+        rng = np.random.default_rng(0)
+        data = rng.standard_normal((50, 16)).astype(np.float32)
+        queries = data[:4]
+        cache.exact({"name": "unit"}, queries, data, 3)
+        d, i = cache.exact({"name": "unit"}, queries, data, 5)
+        assert cache.misses == 2
+        assert i.shape == (4, 5)
+
+    def test_key_is_order_insensitive(self):
+        a = GroundTruthCache.key_for({"x": 1, "y": 2})
+        b = GroundTruthCache.key_for({"y": 2, "x": 1})
+        assert a == b

@@ -1,0 +1,176 @@
+"""Property tests for SignatureRouter.route / route_adaptive.
+
+The routing mask is the accuracy-critical contract of the fleet: a wrong
+row means a query silently skips the shard holding its true neighbours.
+These tests pin the mask invariants over randomized score matrices —
+``route``/``route_adaptive`` both accept a precomputed ``scores=`` matrix,
+so no index build is needed and the properties run over thousands of
+shapes.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # not in the container; vendored fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.fleet.router import SignatureRouter
+from repro.utils.config import ClimberConfig
+
+
+def make_router(num_shards: int) -> SignatureRouter:
+    """A router with ``num_shards`` registered dummy summaries (routing
+    from explicit ``scores=`` never touches pivots or profiles)."""
+    cfg = ClimberConfig(series_len=32, paa_segments=4, num_pivots=8,
+                        prefix_len=3, capacity=64, sample_frac=0.5,
+                        max_centroids=4, k=5)
+    router = SignatureRouter(pivots=None, cfg=cfg)
+    for i in range(num_shards):
+        router.register(f"s{i}", np.zeros(8, np.float32))
+    return router
+
+
+def random_scores(rng: np.random.Generator, q: int, s: int) -> np.ndarray:
+    return rng.standard_normal((q, s)).astype(np.float32)
+
+
+class TestRouteProperties:
+    @settings(max_examples=50)
+    @given(st.integers(1, 12), st.integers(1, 8), st.integers(1, 15),
+           st.integers(0, 10_000))
+    def test_mask_shape_and_row_sums(self, q, s, fanout, seed):
+        """[Q, S] boolean mask with exactly min(fanout, S) shards per row."""
+        router = make_router(s)
+        scores = random_scores(np.random.default_rng(seed), q, s)
+        mask = router.route(np.empty((q, 0)), fanout, scores=scores)
+        assert mask.shape == (q, s) and mask.dtype == bool
+        assert (mask.sum(axis=1) == min(fanout, s)).all()
+
+    @settings(max_examples=25)
+    @given(st.integers(1, 8), st.integers(1, 6), st.integers(0, 10_000))
+    def test_fanout_at_least_s_is_all_true(self, q, s, seed):
+        router = make_router(s)
+        scores = random_scores(np.random.default_rng(seed), q, s)
+        for fanout in (s, s + 1, s + 7):
+            assert router.route(np.empty((q, 0)), fanout,
+                                scores=scores).all()
+
+    @settings(max_examples=50)
+    @given(st.integers(1, 12), st.integers(1, 8), st.integers(1, 15),
+           st.integers(0, 10_000))
+    def test_top_fanout_selects_best_scores(self, q, s, fanout, seed):
+        """Selected shards all score >= every unselected shard."""
+        router = make_router(s)
+        scores = random_scores(np.random.default_rng(seed), q, s)
+        mask = router.route(np.empty((q, 0)), fanout, scores=scores)
+        for i in range(q):
+            if mask[i].all():
+                continue
+            assert scores[i][mask[i]].min() >= scores[i][~mask[i]].max()
+
+    def test_zero_shards(self):
+        router = make_router(3)
+        router.keys, router._summaries = [], []
+        mask = router.route(np.empty((4, 0)), 2)
+        assert mask.shape == (4, 0)
+
+
+class TestRouteAdaptiveProperties:
+    @settings(max_examples=50)
+    @given(st.integers(1, 12), st.integers(1, 8),
+           st.floats(0.0, 1.0), st.integers(0, 10_000))
+    def test_superset_of_top1(self, q, s, threshold, seed):
+        """Every query keeps at least its best-scoring shard, at any
+        threshold — adaptive fan-out never routes to zero shards."""
+        router = make_router(s)
+        scores = random_scores(np.random.default_rng(seed), q, s)
+        mask = router.route_adaptive(np.empty((q, 0)), threshold,
+                                     scores=scores)
+        assert (mask.sum(axis=1) >= 1).all()
+        rows = np.arange(q)
+        assert mask[rows, scores.argmax(axis=1)].all()
+
+    @settings(max_examples=50)
+    @given(st.integers(1, 12), st.integers(2, 8),
+           st.floats(0.0, 1.0), st.floats(0.0, 1.0),
+           st.integers(0, 10_000))
+    def test_monotone_in_threshold(self, q, s, th_a, th_b, seed):
+        """A higher threshold can only widen each query's fan-out."""
+        lo, hi = sorted((th_a, th_b))
+        router = make_router(s)
+        scores = random_scores(np.random.default_rng(seed), q, s)
+        m_lo = router.route_adaptive(np.empty((q, 0)), lo, scores=scores)
+        m_hi = router.route_adaptive(np.empty((q, 0)), hi, scores=scores)
+        assert (m_hi >= m_lo).all()
+
+    @settings(max_examples=25)
+    @given(st.integers(1, 8), st.integers(1, 6), st.integers(0, 10_000))
+    def test_threshold_zero_is_top1(self, q, s, seed):
+        router = make_router(s)
+        scores = random_scores(np.random.default_rng(seed), q, s)
+        mask = router.route_adaptive(np.empty((q, 0)), 0.0, scores=scores)
+        assert (mask.sum(axis=1) == 1).all()
+        top1 = router.route(np.empty((q, 0)), 1, scores=scores)
+        # distinct scores ⇒ the same unique argmax shard (ties may differ
+        # between argpartition and the stable adaptive order, so compare
+        # only where the max is unique)
+        unique = (scores == scores.max(axis=1, keepdims=True)).sum(axis=1) \
+            == 1
+        assert (mask[unique] == top1[unique]).all()
+
+    @settings(max_examples=25)
+    @given(st.integers(1, 8), st.integers(1, 6), st.integers(0, 10_000))
+    def test_threshold_one_is_exhaustive(self, q, s, seed):
+        router = make_router(s)
+        scores = random_scores(np.random.default_rng(seed), q, s)
+        assert router.route_adaptive(np.empty((q, 0)), 1.0,
+                                     scores=scores).all()
+
+    @settings(max_examples=25)
+    @given(st.integers(1, 8), st.integers(2, 8), st.integers(1, 6),
+           st.floats(0.0, 1.0), st.integers(0, 10_000))
+    def test_max_fanout_caps_rows(self, q, s, cap, threshold, seed):
+        router = make_router(s)
+        scores = random_scores(np.random.default_rng(seed), q, s)
+        mask = router.route_adaptive(np.empty((q, 0)), threshold,
+                                     max_fanout=cap, scores=scores)
+        assert (mask.sum(axis=1) <= cap).all()
+        assert (mask.sum(axis=1) >= 1).all()
+
+    def test_zero_shards(self):
+        router = make_router(1)
+        router.keys, router._summaries = [], []
+        assert router.route_adaptive(np.empty((4, 0)), 0.5).shape == (4, 0)
+
+
+class TestLearnThreshold:
+    def test_concentrated_hits_learn_small_threshold(self):
+        """When all true answers live in the top-scoring shard, a small
+        threshold suffices and learn_threshold must not over-spend."""
+        router = make_router(4)
+        rng = np.random.default_rng(0)
+        traces = []
+        for _ in range(32):
+            sc = rng.uniform(0.1, 0.3, size=4)
+            best = rng.integers(4)
+            sc[best] += 2.0                       # clear winner
+            hits = np.zeros(4)
+            hits[best] = 10                       # all answers in it
+            traces.append((sc, hits))
+        th = router.learn_threshold(traces, target_recall=0.95)
+        assert th == router.threshold
+        assert th < 0.5
+
+    def test_scattered_hits_learn_large_threshold(self):
+        """Uniformly scattered answers force a near-exhaustive threshold."""
+        router = make_router(4)
+        rng = np.random.default_rng(1)
+        traces = [(rng.uniform(size=4), np.full(4, 5.0)) for _ in range(32)]
+        th = router.learn_threshold(traces, target_recall=0.99)
+        assert th > 0.5
+
+    def test_no_usable_traces_defaults_to_exhaustive(self):
+        router = make_router(3)
+        th = router.learn_threshold([(np.ones(3), np.zeros(3))])
+        assert th == 1.0
