@@ -138,19 +138,33 @@ def main():
     if args.metrics:
         # run one short network-plane segment so the page includes the
         # per-connection net.* counters and the client rtt histogram next
-        # to the span / engine metrics
+        # to the span / engine metrics; the online recall sentinel
+        # shadow-samples the served queries and audits them off-path so
+        # the fleet.online_recall gauge is live on the page
+        from repro.obs import RecallSentinel
         from repro.serve.net import ClimberClient, serve_in_thread
+        sentinel = RecallSentinel(fleet, sample_rate=1.0)
         server, stop = serve_in_thread(engine)
         with ClimberClient("127.0.0.1", server.port) as client:
             client.query_batch(list(queries[:4]), k=10)
+            sentinel.drain()
+            # fetch the page over the admin plane — the same socket the
+            # queries rode — exactly what a scrape sidecar would do
+            page = client.metrics()
+            health = client.health()
         stop()
+        print(f"admin health: ready={health['ready']} "
+              f"shards={health['shards']} pending={health['pending']} "
+              f"spans_dropped={health['spans_dropped']}")
+        print(f"sentinel: online recall "
+              f"{sentinel.online_recall:.3f} over "
+              f"{sentinel.snapshot()['audits']} audits")
         # everything above recorded into the process registry: spans into
         # span.* histograms, fleet/engine counters via collectors, the net
-        # segment into net.* — this is the page a Prometheus scrape of the
-        # process would return
-        from repro.obs import REGISTRY, to_prometheus
+        # segment into net.*, the sentinel's gauge — this is the page a
+        # Prometheus scrape of the process would return
         print("\n# --- metrics (Prometheus text exposition) ---")
-        print(to_prometheus(REGISTRY), end="")
+        print(page, end="")
 
 
 if __name__ == "__main__":

@@ -57,7 +57,8 @@ class FleetEngine(BatchedServingLoop):
 
     _CONFIG_KEYS = ("batch_size", "k", "routing", "variant", "use_kernel",
                     "fanout", "placement", "maintenance_every",
-                    "merge_policy")
+                    "merge_policy", "trace_ring", "sentinel_rate",
+                    "sentinel_recalibrate_every")
 
     def __init__(self, fleet: IndexFleet, *,
                  config: Optional[api.ServingConfig] = None,
@@ -69,6 +70,8 @@ class FleetEngine(BatchedServingLoop):
         if mesh is not None:
             fleet.attach_mesh(mesh, data_axis=data_axis)
         fleet._resolve_placement(scfg.placement)  # fail fast when bad
+        if scfg.trace_ring:
+            TRACER.set_capacity(scfg.trace_ring)
         cfg = fleet.cfg.shard_cfg
         super().__init__(series_len=cfg.series_len,
                          batch_size=scfg.batch_size, k=scfg.k or cfg.k)
@@ -81,6 +84,14 @@ class FleetEngine(BatchedServingLoop):
         self.maintenance_every = scfg.maintenance_every
         self.merge_policy = scfg.merge_policy
         self.last_maintenance: dict = {"retired": [], "merged": []}
+        # online recall sentinel: shadow-samples served queries and audits
+        # them exhaustively on the _after_tick hook — off the latency path
+        self.sentinel = None
+        if scfg.sentinel_rate > 0.0:
+            from repro.obs.sentinel import RecallSentinel
+            self.sentinel = RecallSentinel(
+                fleet, sample_rate=scfg.sentinel_rate,
+                recalibrate_every=scfg.sentinel_recalibrate_every)
 
     def tenant_load(self, tenant: str) -> float:
         """The tenant's share of the fleet's per-shard query load —
@@ -145,3 +156,8 @@ class FleetEngine(BatchedServingLoop):
         if self.maintenance_every and \
                 self.stats.ticks % self.maintenance_every == 0:
             self.maintenance()
+        if self.sentinel is not None:
+            # audit a couple of shadow samples between batches; queries
+            # land faster than audits drain, so the sentinel's bounded
+            # pending deque (not the serve path) absorbs the difference
+            self.sentinel.drain(max_audits=2)

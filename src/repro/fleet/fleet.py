@@ -443,6 +443,10 @@ class IndexFleet:
         # (scores, true-hit counts) pairs recorded by audit_routing(...,
         # record=True); SignatureRouter.learn_threshold consumes them
         self.routing_traces: List[Tuple[np.ndarray, np.ndarray]] = []
+        # online recall sentinel (repro.obs.sentinel.RecallSentinel
+        # installs itself here); query() hands it each answered batch to
+        # shadow-sample — a pure observer, never on the answer path
+        self.sentinel = None
         ref = weakref.ref(self)
 
         def _collect():
@@ -1322,6 +1326,12 @@ class IndexFleet:
         self.query_hist.observe(sp_root.duration_ms)
         for t in touched:
             self.touched_hist.observe(float(t))
+        if self.sentinel is not None:
+            # shadow-sampling copies (query, answer) pairs aside for the
+            # off-path exhaustive audit; it never mutates the arrays it is
+            # handed, so served answers are bit-identical with sampling
+            # on or off (tests/test_sentinel.py holds this line to it)
+            self.sentinel.observe(queries, k, best_d, best_g)
         return best_d, best_g, FleetQueryInfo(
             partitions_touched=touched, candidates_scanned=scanned,
             routed_mask=mask, lifecycle=lifecycle, stage_ms=stage,

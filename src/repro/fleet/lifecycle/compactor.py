@@ -76,12 +76,17 @@ def start_background_compaction(fleet) -> Optional[CompactionTicket]:
         ticket = CompactionTicket(fleet)
         fleet._seal_ticket = ticket
 
+    # trace handoff: when a serving tick's maintenance hook triggered this
+    # seal, the worker thread's compact.* spans join the triggering
+    # request's trace (adopt is a no-op when no span is open — an
+    # explicitly-called compaction still roots its own tree as before)
+    trigger_ctx = TRACER.current_context()
+
     def _worker():
         t0 = time.perf_counter()
-        # the worker thread's own root span: its compact.* tree interleaves
-        # with the serving thread's fleet.query trees in the tracer ring
-        with TRACER.span("compact.seal", key=frozen.key,
-                         records=len(frozen.data)):
+        with TRACER.adopt(trigger_ctx), \
+                TRACER.span("compact.seal", key=frozen.key,
+                            records=len(frozen.data)):
             try:
                 with TRACER.span("compact.build"):
                     index = fleet._build_shard_index(frozen.data,

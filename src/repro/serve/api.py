@@ -70,6 +70,9 @@ class QueryRequest:
     k: int = 0                # answer size; 0 = the server/engine default
     tenant: str = ""          # admission-quota identity (fleet shard key)
     request_id: int = 0       # caller-chosen correlation id (echoed back)
+    # -- trace context (additive, wire-optional: 0 = absent) --------------
+    trace_id: int = 0         # distributed trace this request belongs to
+    parent_span_id: int = 0   # caller's span to parent server spans under
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -83,6 +86,9 @@ class QueryResult:
     candidates_scanned: int = 0
     latency_ms: float = 0.0   # server-side arrival → answer wall time
     batch_fill: float = 0.0   # live fraction of the tick that served it
+    # -- trace context (additive, wire-optional: 0 = absent) --------------
+    trace_id: int = 0         # echo of the request's trace id
+    parent_span_id: int = 0   # server span that produced this answer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +192,23 @@ class ServingConfig:
       flush_interval_ms a partially filled admission batch is flushed to
                         the executor after this long, so a trickle of
                         requests never waits for a full batch.
+
+    Observability (any engine; see docs/OBSERVABILITY.md):
+
+      trace_ring        span-ring capacity applied to the process tracer
+                        at engine construction (0 = leave the tracer's
+                        current capacity — default 4096 — unchanged).
+                        Evictions under load are counted on the
+                        ``repro_obs_spans_dropped_total`` page metric.
+      sentinel_rate     fraction of served queries the online recall
+                        sentinel shadow-samples (FleetEngine only; 0 =
+                        sentinel off).  Audits run off-path on the
+                        maintenance hook; the running mean lands on the
+                        ``fleet.online_recall`` gauge.
+      sentinel_recalibrate_every
+                        re-learn the adaptive-routing threshold from the
+                        sentinel's production traces after every N
+                        audited queries (0 = record traces only).
     """
 
     # batch / planning
@@ -207,6 +230,10 @@ class ServingConfig:
     tenant_quota: int = 0
     hot_tenant_share: float = 1.0
     flush_interval_ms: float = 2.0
+    # observability
+    trace_ring: int = 0
+    sentinel_rate: float = 0.0
+    sentinel_recalibrate_every: int = 0
 
     def replace(self, **kw) -> "ServingConfig":
         return dataclasses.replace(self, **kw)

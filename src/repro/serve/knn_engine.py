@@ -56,6 +56,7 @@ from repro.core.query import candidates_scanned, default_slot_budget, \
     get_planner, plan as plan_queries
 from repro.core.refine import dispatch_refine, resolve_use_kernel
 from repro.obs import REGISTRY, TRACER
+from repro.obs.tracer import TraceContext
 from repro.serve import api
 
 # distinguishes each serving loop's metric series in the process registry
@@ -149,7 +150,7 @@ class QueryTicket:
     """
 
     __slots__ = ("request", "series", "result", "done", "submitted_at",
-                 "legacy", "conn")
+                 "legacy", "conn", "trace")
 
     def __init__(self, request: api.QueryRequest, series: np.ndarray,
                  submitted_at: Optional[float] = None):
@@ -161,6 +162,7 @@ class QueryTicket:
             if submitted_at is not None else time.perf_counter()
         self.legacy: Optional[QueryRequest] = None   # write-back adapter
         self.conn = None                   # net server's delivery handle
+        self.trace: Optional[TraceContext] = None    # admitting context
 
     @property
     def ok(self) -> bool:
@@ -310,6 +312,15 @@ class BatchedServingLoop:
         series = self.validate_series(req.series, req.request_id)
         self.validate_k(req.k, req.request_id)
         ticket = QueryTicket(req, series)
+        # trace handoff: a wire-carried context wins (cross-process); an
+        # in-process caller's open span is captured otherwise, so the
+        # executor thread's tick can adopt the *admitting* context either
+        # way — the tick span then joins the request's trace, not a fresh
+        # executor-thread-rooted one
+        if req.trace_id:
+            ticket.trace = TraceContext(req.trace_id, req.parent_span_id)
+        else:
+            ticket.trace = TRACER.current_context()
         with self._tenant_lock:
             self._tenant_inflight[req.tenant] = \
                 self._tenant_inflight.get(req.tenant, 0) + 1
@@ -365,6 +376,7 @@ class BatchedServingLoop:
                              request_id=req.rid),
             series, submitted_at=req.submitted_at)
         ticket.legacy = req
+        ticket.trace = TRACER.current_context()
         with self._tenant_lock:
             self._tenant_inflight[""] = self._tenant_inflight.get("", 0) + 1
         self.queue.append(ticket)
@@ -385,6 +397,21 @@ class BatchedServingLoop:
             qbatch[i] = t.series
         return qbatch
 
+    @staticmethod
+    def _batch_context(tickets: List[QueryTicket]):
+        """The trace context one tick adopts: the first admitted ticket's.
+
+        A batch can mix requests from several traces; the tick span joins
+        the first one (its ``traces`` attr counts the distinct ids so the
+        others remain discoverable) — every ticket's own result still
+        echoes its *own* trace id.
+        """
+        ids = {t.trace.trace_id for t in tickets if t.trace is not None}
+        for t in tickets:
+            if t.trace is not None:
+                return t.trace, len(ids)
+        return None, 0
+
     def execute_prepared(self, qbatch: np.ndarray,
                          tickets: List[QueryTicket]) -> int:
         """Run one pre-assembled tick and complete its tickets.
@@ -394,13 +421,21 @@ class BatchedServingLoop:
         into the next batch.  Raises whatever ``_execute`` raises — the
         caller decides whether to fail the tickets
         (:meth:`fail_tickets`) or retry.
+
+        The tick span (and everything under it, including the
+        maintenance hook and any compaction it triggers) adopts the
+        admitting requests' trace context, so executor-thread spans stay
+        in the request's trace instead of rooting their own.
         """
-        with TRACER.span("serve.tick", loop=self.obs_label,
-                         live=len(tickets)):
-            dist, gid, touched, scanned, dt = \
-                self._execute(qbatch, len(tickets))
-        self._finish_batch(tickets, dist, gid, touched, scanned, dt)
-        self._after_tick()
+        ctx, ntraces = self._batch_context(tickets)
+        with TRACER.adopt(ctx):
+            with TRACER.span("serve.tick", loop=self.obs_label,
+                             live=len(tickets), traces=ntraces) as tick:
+                dist, gid, touched, scanned, dt = \
+                    self._execute(qbatch, len(tickets))
+            self._finish_batch(tickets, dist, gid, touched, scanned, dt,
+                               tick_span=tick)
+            self._after_tick()
         return len(tickets)
 
     def fail_tickets(self, tickets: List[QueryTicket],
@@ -415,9 +450,12 @@ class BatchedServingLoop:
             t.done = True
 
     def _finish_batch(self, tickets: List[QueryTicket], dist, gid,
-                      touched, scanned, dt: float) -> None:
+                      touched, scanned, dt: float,
+                      tick_span=None) -> None:
         """Complete tickets from one executed tick: typed results, the
-        legacy write-back adapter, latency histogram, aggregate stats."""
+        legacy write-back adapter, latency histogram, aggregate stats.
+        ``tick_span`` (the finished ``serve.tick``) stamps each result's
+        trace echo so a remote client can link answer to server tick."""
         done_at = time.perf_counter()
         fill = len(tickets) / self.batch_size
         metrics = []
@@ -436,7 +474,10 @@ class BatchedServingLoop:
                 dist=dist[i, :kq], gid=gid[i, :kq],
                 partitions_touched=qm.partitions_touched,
                 candidates_scanned=qm.candidates_scanned,
-                latency_ms=latency_ms, batch_fill=fill)
+                latency_ms=latency_ms, batch_fill=fill,
+                trace_id=t.trace.trace_id if t.trace is not None else 0,
+                parent_span_id=tick_span.span_id
+                if tick_span is not None else 0)
             if t.legacy is not None:      # thin adapter: mutate in place
                 t.legacy.dist, t.legacy.gid = dist[i, :kq], gid[i, :kq]
                 t.legacy.metrics = qm
@@ -453,16 +494,19 @@ class BatchedServingLoop:
             return 0
         live = self.queue[:min(self.batch_size, len(self.queue))]
         qbatch = self.prepare_batch(live)
+        ctx, ntraces = self._batch_context(live)
         # pop only after the tick succeeds: a device error leaves the
         # queue intact instead of dropping in-flight requests
-        with TRACER.span("serve.tick", loop=self.obs_label,
-                         live=len(live)):
-            dist, gid, touched, scanned, dt = \
-                self._execute(qbatch, len(live))
-        del self.queue[:len(live)]
-        self.queue_gauge.set(len(self.queue))
-        self._finish_batch(live, dist, gid, touched, scanned, dt)
-        self._after_tick()
+        with TRACER.adopt(ctx):
+            with TRACER.span("serve.tick", loop=self.obs_label,
+                             live=len(live), traces=ntraces) as tick:
+                dist, gid, touched, scanned, dt = \
+                    self._execute(qbatch, len(live))
+            del self.queue[:len(live)]
+            self.queue_gauge.set(len(self.queue))
+            self._finish_batch(live, dist, gid, touched, scanned, dt,
+                               tick_span=tick)
+            self._after_tick()
         return len(live)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
@@ -552,7 +596,7 @@ class ClimberEngine(BatchedServingLoop):
     """
 
     _CONFIG_KEYS = ("batch_size", "variant", "k", "use_kernel",
-                    "max_slots", "plan_cache_size")
+                    "max_slots", "plan_cache_size", "trace_ring")
 
     def __init__(self, index: ClimberIndex, *,
                  config: Optional[api.ServingConfig] = None,
@@ -560,6 +604,8 @@ class ClimberEngine(BatchedServingLoop):
         cfg = api.resolve_config(config, kwargs, self._CONFIG_KEYS)
         self.config = cfg
         get_planner(cfg.variant)             # fail fast on unknown variants
+        if cfg.trace_ring:                   # size the span ring for the
+            TRACER.set_capacity(cfg.trace_ring)   # expected serving load
         super().__init__(series_len=index.cfg.series_len,
                          batch_size=cfg.batch_size, k=cfg.k or index.cfg.k)
         self.index = index

@@ -19,13 +19,14 @@ and quota — carries ``retry_after_ms``) and :class:`ServerError`
 from __future__ import annotations
 
 import asyncio
+import json
 import socket
 import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.obs import REGISTRY
+from repro.obs import REGISTRY, TRACER
 from repro.serve import api
 from repro.serve.net import codec, schema
 
@@ -63,6 +64,7 @@ class ClimberClient:
                  client_name: str = "climber-client",
                  timeout: float = 30.0):
         self.tenant = tenant
+        self._client_name = client_name
         self._sock = socket.create_connection((host, port), timeout=timeout)
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self._next_rid = 0
@@ -100,30 +102,74 @@ class ClimberClient:
         batch-completion order, not send order).  The first typed error
         raises after all replies are drained, so the stream stays in
         sync for the next call.
+
+        The whole pipelined exchange runs under one ``net.rtt`` span
+        with a client-minted ``trace_id`` that rides every request, so
+        the server's admission/tick/fleet spans and the client's RTT
+        span form ONE distributed trace.
         """
         tenant = self.tenant if tenant is None else tenant
         rids = []
+        trace_id = TRACER.mint_trace_id()
         t0 = time.perf_counter()
-        for series in series_list:
-            rid = self._next_rid
-            self._next_rid += 1
-            rids.append(rid)
-            self._send(schema.MsgType.QUERY, api.QueryRequest(
-                series=np.asarray(series, np.float32), k=k,
-                tenant=tenant, request_id=rid))
-        replies: Dict[int, object] = {}
-        while len(replies) < len(rids):
-            mtype, msg = self._recv()
-            if mtype not in (schema.MsgType.RESULT, schema.MsgType.ERROR):
-                raise codec.FrameError(
-                    "BAD_PAYLOAD", f"unexpected {mtype.name} from server")
-            replies[msg.request_id] = msg
+        with TRACER.adopt(trace_id), \
+                TRACER.span("net.rtt", client=self._client_name,
+                            requests=len(series_list)) as rtt_span:
+            for series in series_list:
+                rid = self._next_rid
+                self._next_rid += 1
+                rids.append(rid)
+                self._send(schema.MsgType.QUERY, api.QueryRequest(
+                    series=np.asarray(series, np.float32), k=k,
+                    tenant=tenant, request_id=rid,
+                    trace_id=trace_id,
+                    parent_span_id=rtt_span.span_id))
+            replies: Dict[int, object] = {}
+            while len(replies) < len(rids):
+                mtype, msg = self._recv()
+                if mtype not in (schema.MsgType.RESULT,
+                                 schema.MsgType.ERROR):
+                    raise codec.FrameError(
+                        "BAD_PAYLOAD",
+                        f"unexpected {mtype.name} from server")
+                replies[msg.request_id] = msg
         rtt_ms = (time.perf_counter() - t0) * 1e3
         self.rtt_hist.observe(rtt_ms / max(1, len(rids)))
         for rid in rids:
             if isinstance(replies[rid], api.ErrorReply):
                 _raise_for(replies[rid])
         return [replies[rid] for rid in rids]
+
+    # -- admin plane -------------------------------------------------------
+    def _admin(self, mtype: schema.MsgType, msg: dict) -> dict:
+        """One admin round trip (call between query batches — the
+        blocking client is sequential, so no replies can interleave)."""
+        self._send(mtype, msg)
+        got_type, got = self._recv()
+        if got_type == schema.MsgType.ERROR:
+            _raise_for(got)
+        if got_type != mtype:
+            raise codec.FrameError(
+                "BAD_PAYLOAD", f"expected {mtype.name}, got {got_type.name}")
+        return got
+
+    def metrics(self) -> str:
+        """The server's Prometheus text-exposition page, over the same
+        socket queries ride (no separate scrape endpoint to deploy)."""
+        return self._admin(schema.MsgType.METRICS, {})["page"]
+
+    def health(self) -> dict:
+        """Readiness card: ``ready`` / ``draining``, queue + executor
+        depth, shard count, delta occupancy, compaction in flight,
+        spans dropped (see ``ClimberServer.health``)."""
+        return self._admin(schema.MsgType.HEALTH, {})
+
+    def traces(self, limit: int = 0) -> List[dict]:
+        """Recent tail-sampled slow/error traces from the server's
+        flight recorder, newest last (``limit`` keeps the newest N)."""
+        reply = self._admin(schema.MsgType.TRACES, {"limit": limit})
+        text = reply["traces_jsonl"].strip()
+        return [json.loads(line) for line in text.splitlines() if line]
 
     def close(self) -> None:
         try:
@@ -203,13 +249,21 @@ class AsyncClimberClient:
         self._next_rid += 1
         fut = asyncio.get_event_loop().create_future()
         self._futures[rid] = fut
+        trace_id = TRACER.mint_trace_id()
         t0 = time.perf_counter()
-        self._writer.write(schema.encode_message(
-            schema.MsgType.QUERY, api.QueryRequest(
-                series=np.asarray(series, np.float32), k=k,
-                tenant=self.tenant if tenant is None else tenant,
-                request_id=rid)))
-        await self._writer.drain()
+        # the span covers only the send — the await yields the event loop
+        # to other tasks, so a span across it would nest their traces
+        with TRACER.adopt(trace_id), \
+                TRACER.span("net.rtt", client=self._client_name,
+                            requests=1) as rtt_span:
+            self._writer.write(schema.encode_message(
+                schema.MsgType.QUERY, api.QueryRequest(
+                    series=np.asarray(series, np.float32), k=k,
+                    tenant=self.tenant if tenant is None else tenant,
+                    request_id=rid,
+                    trace_id=trace_id,
+                    parent_span_id=rtt_span.span_id)))
+            await self._writer.drain()
         msg = await fut
         self.rtt_hist.observe((time.perf_counter() - t0) * 1e3)
         if isinstance(msg, api.ErrorReply):

@@ -32,6 +32,11 @@ class MsgType(enum.IntEnum):
     RESULT = 4        # server → client: api.QueryResult
     ERROR = 5         # server → client: api.ErrorReply
     BYE = 6           # client → server: drain + close this connection
+    # admin plane (PR 10): request/reply share the kind; the client sends
+    # an (empty or small) dict, the server replies with the payload dict
+    METRICS = 7       # ↔ the Prometheus text-exposition page
+    HEALTH = 8        # ↔ readiness: drain state, queue depth, compaction
+    TRACES = 9        # ↔ the flight recorder's retained slow traces
 
 
 Message = Union[api.QueryRequest, api.QueryResult, api.ErrorReply,
@@ -62,11 +67,16 @@ def _enc_hello(msg: dict) -> bytes:
 
 
 def _enc_query(msg: api.QueryRequest) -> bytes:
+    # trace_id / parent_span_id are additive (PR 10): an older decoder
+    # ignores the extra fields, an older encoder's frames decode with the
+    # 0 = "no trace" default — WIRE_VERSION stays 1
     return codec.encode_payload({
         "request_id": np.asarray(msg.request_id, np.int64),
         "series": np.asarray(msg.series, np.float32),
         "k": np.asarray(msg.k, np.int32),
         "tenant": np.asarray(msg.tenant),
+        "trace_id": np.asarray(msg.trace_id, np.uint64),
+        "parent_span_id": np.asarray(msg.parent_span_id, np.uint64),
     })
 
 
@@ -79,6 +89,8 @@ def _enc_result(msg: api.QueryResult) -> bytes:
         "candidates_scanned": np.asarray(msg.candidates_scanned, np.int64),
         "latency_ms": np.asarray(msg.latency_ms, np.float64),
         "batch_fill": np.asarray(msg.batch_fill, np.float64),
+        "trace_id": np.asarray(msg.trace_id, np.uint64),
+        "parent_span_id": np.asarray(msg.parent_span_id, np.uint64),
     })
 
 
@@ -106,6 +118,52 @@ def _enc_info(msg: api.ServerInfo) -> bytes:
     })
 
 
+# -- admin plane (dict payloads both directions) ---------------------------
+#
+# A client's admin *request* is a small dict ({} or {"limit": n}); the
+# server's *reply* reuses the same MsgType with the payload filled in.
+# Every reply field decodes with a default, so the admin plane follows the
+# same additive-evolution rule as QUERY/RESULT.
+
+# readiness scalars a HEALTH reply carries (all encoded int64)
+_HEALTH_FIELDS = ("ready", "draining", "pending", "queue_depth",
+                  "exec_depth", "shards", "delta_occupancy",
+                  "compaction_in_flight", "spans_dropped")
+
+
+def _enc_metrics(msg: dict) -> bytes:
+    return codec.encode_payload({
+        "page": np.asarray(str(msg.get("page", "")))})
+
+
+def _dec_metrics(fields) -> dict:
+    return {"page": _text(fields, "page")}
+
+
+def _enc_health(msg: dict) -> bytes:
+    return codec.encode_payload({
+        key: np.asarray(int(msg.get(key, 0)), np.int64)
+        for key in _HEALTH_FIELDS})
+
+
+def _dec_health(fields) -> dict:
+    return {key: _scalar(fields, key, int, 0) for key in _HEALTH_FIELDS}
+
+
+def _enc_traces(msg: dict) -> bytes:
+    return codec.encode_payload({
+        "limit": np.asarray(int(msg.get("limit", 0)), np.int64),
+        "count": np.asarray(int(msg.get("count", 0)), np.int64),
+        "traces_jsonl": np.asarray(str(msg.get("traces_jsonl", ""))),
+    })
+
+
+def _dec_traces(fields) -> dict:
+    return {"limit": _scalar(fields, "limit", int, 0),
+            "count": _scalar(fields, "count", int, 0),
+            "traces_jsonl": _text(fields, "traces_jsonl")}
+
+
 # -- per-type decoders -----------------------------------------------------
 
 def _dec_hello(fields) -> dict:
@@ -120,7 +178,9 @@ def _dec_query(fields) -> api.QueryRequest:
         series=np.asarray(fields["series"], np.float32),
         k=_scalar(fields, "k", int, 0),
         tenant=_text(fields, "tenant"),
-        request_id=_scalar(fields, "request_id", int, 0))
+        request_id=_scalar(fields, "request_id", int, 0),
+        trace_id=_scalar(fields, "trace_id", int, 0),
+        parent_span_id=_scalar(fields, "parent_span_id", int, 0))
 
 
 def _dec_result(fields) -> api.QueryResult:
@@ -134,7 +194,9 @@ def _dec_result(fields) -> api.QueryResult:
         partitions_touched=_scalar(fields, "partitions_touched", int, 0),
         candidates_scanned=_scalar(fields, "candidates_scanned", int, 0),
         latency_ms=_scalar(fields, "latency_ms", float, 0.0),
-        batch_fill=_scalar(fields, "batch_fill", float, 0.0))
+        batch_fill=_scalar(fields, "batch_fill", float, 0.0),
+        trace_id=_scalar(fields, "trace_id", int, 0),
+        parent_span_id=_scalar(fields, "parent_span_id", int, 0))
 
 
 def _dec_error(fields) -> api.ErrorReply:
@@ -170,6 +232,9 @@ _ENCODERS = {
     MsgType.RESULT: _enc_result,
     MsgType.ERROR: _enc_error,
     MsgType.BYE: lambda msg: codec.encode_payload({}),
+    MsgType.METRICS: _enc_metrics,
+    MsgType.HEALTH: _enc_health,
+    MsgType.TRACES: _enc_traces,
 }
 
 _DECODERS = {
@@ -179,6 +244,9 @@ _DECODERS = {
     MsgType.RESULT: _dec_result,
     MsgType.ERROR: _dec_error,
     MsgType.BYE: lambda fields: {},
+    MsgType.METRICS: _dec_metrics,
+    MsgType.HEALTH: _dec_health,
+    MsgType.TRACES: _dec_traces,
 }
 
 

@@ -35,6 +35,8 @@ from typing import List, Optional
 import numpy as np
 
 from repro.obs import REGISTRY, TRACER
+from repro.obs.export import to_prometheus
+from repro.obs.flight import FLIGHT
 from repro.serve import api
 from repro.serve.knn_engine import BatchedServingLoop, QueryTicket
 from repro.serve.net import codec, schema
@@ -88,6 +90,10 @@ class ClimberServer:
         self.config = config if config is not None \
             else getattr(engine, "config", api.ServingConfig())
         self.port: Optional[int] = None
+        if self.config.trace_ring:
+            TRACER.set_capacity(self.config.trace_ring)
+        # tail-sampled slow/error traces served over the TRACES admin kind
+        self.flight = FLIGHT
 
         # double buffer: building batch (event loop) + bounded exec queue
         self._building: List[QueryTicket] = []
@@ -169,7 +175,19 @@ class ClimberServer:
         """Validate + quota-check + append to the building batch.
 
         Every refusal posts a typed ErrorReply; success posts nothing
-        (the answer arrives when the batch executes)."""
+        (the answer arrives when the batch executes).  The admission
+        decision runs under a ``net.admit`` span adopted into the
+        request's client-minted trace, so a refusal is a one-span trace
+        and an admit links the client's RTT span to the tick that will
+        execute it."""
+        with TRACER.adopt(req.trace_id, req.parent_span_id), \
+                TRACER.span("net.admit",
+                            conn=f"c{getattr(conn, 'cid', '?')}",
+                            tenant=req.tenant):
+            self._admit_inner(req, conn)
+
+    def _admit_inner(self, req: api.QueryRequest,
+                     conn: _Connection) -> None:
         if self._draining:
             self._reject(conn, req, "SHUTTING_DOWN", "server draining")
             return
@@ -210,6 +228,9 @@ class ClimberServer:
     def _reject(self, conn: _Connection, req: api.QueryRequest, code: str,
                 message: str, retry_after_ms: float = 0.0) -> None:
         self._n_rejected.inc()
+        # noted before the enclosing net.admit span finishes, so the
+        # flight recorder retains the refused request's trace
+        self.flight.note_error(req.trace_id, code)
         conn.post(schema.MsgType.ERROR,
                   api.ErrorReply(request_id=req.request_id, code=code,
                                  message=message,
@@ -246,6 +267,16 @@ class ClimberServer:
                     tickets, api.ErrorReply(
                         request_id=0, code="INTERNAL",
                         message=f"{type(exc).__name__}: {exc}"))
+                # the tick's spans already closed when the exception
+                # unwound, so note the error and finish a tiny net.fail
+                # error-trigger span per trace to retain the evidence
+                for t in tickets:
+                    if t.trace is not None and t.trace.trace_id:
+                        self.flight.note_error(t.trace.trace_id,
+                                               "INTERNAL")
+                        with TRACER.adopt(t.trace), \
+                                TRACER.span("net.fail", code="INTERNAL"):
+                            pass
             finally:
                 self._executing = False
             self._loop.call_soon_threadsafe(self._deliver, tickets)
@@ -280,6 +311,48 @@ class ClimberServer:
             shards=len(fleet.shards) if fleet is not None else 0,
             max_pending=self.config.max_pending,
             tenant_quota=self.config.tenant_quota)
+
+    def health(self) -> dict:
+        """The HEALTH admin reply: readiness + load + lifecycle state.
+
+        ``ready`` is "this server will admit a query right now": not
+        draining.  The depth fields expose how full the double buffer is
+        (``queue_depth`` = building batch, ``exec_depth`` = assembled
+        batches waiting for the device); ``compaction_in_flight`` says a
+        background INX rebuild is running (expect a latency shoulder);
+        ``spans_dropped`` rising between scrapes means the trace ring is
+        undersized for the load (raise ``ServingConfig.trace_ring``).
+        """
+        engine = self.engine
+        fleet = getattr(engine, "fleet", None)
+        dropped = TRACER._dropped
+        return {
+            "ready": int(not self._draining),
+            "draining": int(self._draining),
+            "pending": self._pending,
+            "queue_depth": len(self._building),
+            "exec_depth": self._exec_queue.qsize(),
+            "shards": len(fleet.shards) if fleet is not None else 0,
+            "delta_occupancy": fleet.delta.occupancy
+            if fleet is not None else 0,
+            "compaction_in_flight": int(
+                fleet is not None and fleet._seal_ticket is not None),
+            "spans_dropped": int(dropped.value)
+            if dropped is not None else 0,
+        }
+
+    def _answer_admin(self, mtype: schema.MsgType, msg: dict,
+                      conn: _Connection) -> None:
+        """Admin plane: reply in the same MsgType over the same socket."""
+        if mtype == schema.MsgType.METRICS:
+            conn.post(mtype, {"page": to_prometheus(REGISTRY)})
+        elif mtype == schema.MsgType.HEALTH:
+            conn.post(mtype, self.health())
+        else:                                   # TRACES
+            limit = int(msg.get("limit", 0))
+            records = self.flight.records(limit)
+            conn.post(mtype, {"limit": limit, "count": len(records),
+                              "traces_jsonl": self.flight.jsonl(limit)})
 
     async def _handle_connection(self, reader, writer) -> None:
         cid = self._next_cid
@@ -325,6 +398,10 @@ class ClimberServer:
             mtype, msg = schema.decode_message(msg_type, payload)
             if mtype == schema.MsgType.BYE:
                 return
+            if mtype in (schema.MsgType.METRICS, schema.MsgType.HEALTH,
+                         schema.MsgType.TRACES):
+                self._answer_admin(mtype, msg, conn)
+                continue
             if mtype != schema.MsgType.QUERY:
                 raise codec.FrameError(
                     "BAD_PAYLOAD", f"unexpected {mtype.name} from client")

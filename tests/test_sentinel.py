@@ -1,0 +1,207 @@
+"""Online recall sentinel acceptance tests.
+
+The contracts from the issue:
+  * **bit-identity**: enabling shadow sampling changes NOTHING about the
+    answers the fleet serves — dist and gid are bit-identical with the
+    sentinel on or off;
+  * the sentinel's online recall estimate lands within ±0.05 of the
+    offline evaluation harness's recall for the same routing config;
+  * audits feed ``audit_routing(record=True)``-style traces into
+    ``fleet.routing_traces`` so ``calibrate_routing`` can re-learn the
+    adaptive threshold from production traffic;
+  * sampling is bounded (never backpressure) and stale samples — fleet
+    contents moved between serve and audit — are discarded, not
+    mis-scored;
+  * the ``fleet.online_recall`` gauge exports as
+    ``repro_fleet_online_recall``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_dataset, make_queries
+from repro.eval.metrics import recall_at_k
+from repro.fleet import FleetConfig, FleetEngine, IndexFleet
+from repro.obs import REGISTRY, RecallSentinel, to_prometheus
+from repro.utils.config import ClimberConfig
+
+K = 10
+
+
+def small_cfg() -> ClimberConfig:
+    return ClimberConfig(series_len=64, paa_segments=8, num_pivots=32,
+                         prefix_len=5, capacity=128, sample_frac=0.3,
+                         max_centroids=12, k=K, candidate_groups=4,
+                         adaptive_factor=4)
+
+
+def make_fleet(data: np.ndarray) -> IndexFleet:
+    fleet = IndexFleet(FleetConfig(shard_cfg=small_cfg(), fanout=2,
+                                   delta_capacity=4096, auto_compact=False))
+    for i in range(2):
+        fleet.add_shard(f"tenant{i}", data[i * 600:(i + 1) * 600])
+    return fleet
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    data = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(0),
+                                   1200, 64))
+    queries = np.asarray(make_queries(jax.random.PRNGKey(2),
+                                      jnp.asarray(data), 32))
+    return data, queries
+
+
+class TestBitIdentity:
+    def test_sampling_never_changes_served_answers(self, corpus):
+        data, queries = corpus
+        plain = make_fleet(data)
+        watched = make_fleet(data)
+        sentinel = RecallSentinel(watched, sample_rate=1.0, seed=3,
+                                  registry=None)
+        for routing in ("signature", "adaptive", "exhaustive"):
+            d0, g0, _ = plain.query(queries, k=K, routing=routing)
+            d1, g1, _ = watched.query(queries, k=K, routing=routing)
+            np.testing.assert_array_equal(d0, d1)
+            np.testing.assert_array_equal(g0, g1)
+        assert sentinel.pending() > 0    # it did sample — just passively
+
+    def test_attaching_mid_stream_is_invisible(self, corpus):
+        data, queries = corpus
+        fleet = make_fleet(data)
+        d0, g0, _ = fleet.query(queries, k=K, routing="signature")
+        RecallSentinel(fleet, sample_rate=1.0, registry=None)
+        d1, g1, _ = fleet.query(queries, k=K, routing="signature")
+        np.testing.assert_array_equal(d0, d1)
+        np.testing.assert_array_equal(g0, g1)
+
+
+class TestOnlineRecall:
+    def test_matches_offline_eval_within_tolerance(self, corpus):
+        data, queries = corpus
+        fleet = make_fleet(data)
+        sentinel = RecallSentinel(fleet, sample_rate=1.0, seed=7,
+                                  registry=None)
+        dist, gid, _ = fleet.query(queries, k=K, routing="signature")
+        audited = sentinel.drain()
+        assert audited == len(queries)   # rate 1.0: every query sampled
+        # offline harness: the same served answers against the same
+        # exhaustive ground truth, scored with the same tie-aware metric
+        exact_d, exact_g = fleet.scan_exact(queries, K)
+        offline = recall_at_k(gid, exact_g, K, approx_dist=dist,
+                              exact_dist=exact_d)
+        assert abs(sentinel.online_recall - offline) <= 0.05
+        snap = sentinel.snapshot()
+        assert snap["audits"] == len(queries)
+        assert snap["pending"] == 0
+
+    def test_gauge_exports_as_repro_fleet_online_recall(self, corpus):
+        data, queries = corpus
+        fleet = make_fleet(data)
+        sentinel = RecallSentinel(fleet, sample_rate=1.0, seed=1)
+        fleet.query(queries[:8], k=K, routing="signature")
+        sentinel.drain()
+        page = to_prometheus(REGISTRY)
+        assert "repro_fleet_online_recall" in page
+        assert "repro_sentinel_audits_total" in page
+
+    def test_worker_thread_drains(self, corpus):
+        data, queries = corpus
+        fleet = make_fleet(data)
+        sentinel = RecallSentinel(fleet, sample_rate=1.0, seed=2,
+                                  registry=None)
+        fleet.query(queries[:8], k=K, routing="signature")
+        sentinel.start(interval_s=0.01)
+        try:
+            deadline = 30.0
+            import time
+            t0 = time.time()
+            while sentinel.pending() and time.time() - t0 < deadline:
+                time.sleep(0.02)
+        finally:
+            sentinel.stop()
+        assert sentinel.pending() == 0
+        assert sentinel.snapshot()["audits"] == 8
+
+
+class TestBoundsAndStaleness:
+    def test_pending_is_bounded(self, corpus):
+        data, queries = corpus
+        fleet = make_fleet(data)
+        sentinel = RecallSentinel(fleet, sample_rate=1.0, max_pending=16,
+                                  registry=None)
+        for _ in range(3):
+            fleet.query(queries, k=K, routing="signature")
+        assert sentinel.pending() == 16  # oldest dropped, never grows
+
+    def test_stale_samples_are_discarded(self, corpus):
+        data, queries = corpus
+        fleet = make_fleet(data)
+        sentinel = RecallSentinel(fleet, sample_rate=1.0, registry=None)
+        fleet.query(queries[:8], k=K, routing="signature")
+        assert sentinel.pending() == 8
+        fleet.insert(data[:4])           # contents moved since serve time
+        assert sentinel.drain() == 0     # all stale: discarded, not scored
+        assert sentinel.pending() == 0
+        assert sentinel.online_recall == 1.0   # no evidence recorded
+
+    def test_rate_zero_never_samples(self, corpus):
+        data, queries = corpus
+        fleet = make_fleet(data)
+        sentinel = RecallSentinel(fleet, sample_rate=0.0, registry=None)
+        fleet.query(queries, k=K, routing="signature")
+        assert sentinel.pending() == 0
+        with pytest.raises(ValueError):
+            RecallSentinel(make_fleet(data), sample_rate=1.5,
+                           registry=None)
+
+
+class TestRoutingFeedback:
+    def test_audits_feed_routing_traces(self, corpus):
+        data, queries = corpus
+        fleet = make_fleet(data)
+        sentinel = RecallSentinel(fleet, sample_rate=1.0, registry=None)
+        assert not fleet.routing_traces
+        fleet.query(queries[:8], k=K, routing="signature")
+        sentinel.drain()
+        assert len(fleet.routing_traces) == 8
+        scores, hits = fleet.routing_traces[0]
+        assert scores.shape == (len(fleet.shards),)
+        assert hits.shape == (len(fleet.shards),)
+        assert hits.sum() <= K           # per-shard true-hit counts
+        # the traces are calibrate_routing fuel
+        threshold = fleet.calibrate_routing(0.9)
+        assert threshold == fleet.router.threshold
+
+    def test_recalibrate_every_relearns_threshold(self, corpus):
+        data, queries = corpus
+        fleet = make_fleet(data)
+        sentinel = RecallSentinel(fleet, sample_rate=1.0,
+                                  recalibrate_every=8, target_recall=0.9,
+                                  registry=None)
+        fleet.query(queries[:16], k=K, routing="signature")
+        sentinel.drain()
+        assert sentinel.last_threshold is not None
+        assert fleet.router.threshold == sentinel.last_threshold
+
+
+class TestEngineWiring:
+    def test_serving_config_enables_sentinel(self, corpus):
+        data, queries = corpus
+        fleet = make_fleet(data)
+        engine = FleetEngine(fleet, batch_size=4, sentinel_rate=1.0,
+                             sentinel_recalibrate_every=4)
+        assert engine.sentinel is not None
+        assert fleet.sentinel is engine.sentinel
+        assert engine.sentinel.recalibrate_every == 4
+        fleet.query(queries[:8], k=K, routing="signature")
+        before = engine.sentinel.pending()
+        assert before == 8
+        engine._after_tick()             # the serving loop's drain hook
+        assert engine.sentinel.pending() < before
+
+    def test_disabled_by_default(self, corpus):
+        data, _ = corpus
+        engine = FleetEngine(make_fleet(data), batch_size=4)
+        assert engine.sentinel is None

@@ -1,0 +1,402 @@
+"""End-to-end trace propagation, flight recorder and admin plane tests.
+
+The contracts from the issue:
+  * ONE distributed trace per client call: a localhost query's server
+    spans (``net.admit`` → ``serve.tick`` → ``fleet.query`` → per-shard
+    stages) all carry the client-minted ``trace_id``, and the client's
+    own ``net.rtt`` span carries the same id — across threads and a real
+    socket;
+  * executor-thread tick spans adopt the *admitting* request's context
+    (the cross-thread handoff through the double buffer), and
+    compaction-worker spans join the triggering trace;
+  * the flight recorder tail-samples full span trees for slow or failed
+    requests only, in a bounded ring, exportable as JSONL;
+  * the admin plane answers METRICS / HEALTH / TRACES over the same
+    socket queries ride.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                # container fallback
+    from tests._hypothesis_fallback import given, settings, st
+
+from repro.data import make_dataset, make_queries
+from repro.fleet import FleetConfig, FleetEngine, IndexFleet
+from repro.obs import (REGISTRY, TRACER, MetricsRegistry, SpanTracer,
+                       TraceContext)
+from repro.obs.flight import FlightRecorder
+from repro.serve import api
+from repro.serve.net import ClimberClient, ServerError, codec, schema, \
+    serve_in_thread
+from repro.utils.config import ClimberConfig
+
+K = 10
+
+
+def small_cfg() -> ClimberConfig:
+    return ClimberConfig(series_len=64, paa_segments=8, num_pivots=32,
+                         prefix_len=5, capacity=128, sample_frac=0.3,
+                         max_centroids=12, k=K, candidate_groups=4,
+                         adaptive_factor=4)
+
+
+def make_fleet(data: np.ndarray) -> IndexFleet:
+    fleet = IndexFleet(FleetConfig(shard_cfg=small_cfg(), fanout=2,
+                                   delta_capacity=4096, auto_compact=False))
+    for i in range(2):
+        fleet.add_shard(f"tenant{i}", data[i * 600:(i + 1) * 600])
+    return fleet
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    data = np.asarray(make_dataset("randomwalk", jax.random.PRNGKey(0),
+                                   1200, 64))
+    queries = np.asarray(make_queries(jax.random.PRNGKey(2),
+                                      jnp.asarray(data), 8))
+    return data, queries
+
+
+# -- TraceContext / adopt unit + property tests -----------------------------
+
+class TestTraceContext:
+    def test_mint_is_nonzero_and_distinct(self):
+        ids = {SpanTracer.mint_trace_id() for _ in range(256)}
+        assert 0 not in ids
+        assert len(ids) == 256           # 63-bit space: collisions ≈ never
+
+    def test_adopt_none_and_zero_are_noops(self):
+        tracer = SpanTracer(capacity=16)
+        for ctx in (None, 0, TraceContext(0)):
+            with tracer.adopt(ctx):
+                with tracer.span("w") as sp:
+                    pass
+                assert sp.trace_id == sp.span_id   # rooted its own trace
+                assert sp.parent_id is None
+
+    @settings(max_examples=50)
+    @given(st.integers(min_value=1, max_value=2**63 - 1),
+           st.integers(min_value=0, max_value=2**31))
+    def test_adopted_spans_join_the_remote_trace(self, trace_id, span_id):
+        tracer = SpanTracer(capacity=64)
+        with tracer.adopt(TraceContext(trace_id, span_id)):
+            with tracer.span("outer") as outer:
+                with tracer.span("inner") as inner:
+                    pass
+        assert outer.trace_id == trace_id
+        assert inner.trace_id == trace_id
+        # span_id=0 means "root of the remote trace": no local parent
+        assert outer.parent_id == (span_id or None)
+        assert inner.parent_id == outer.span_id
+
+    def test_current_context_exports_innermost(self):
+        tracer = SpanTracer(capacity=16)
+        assert tracer.current_context() is None
+        with tracer.span("a") as a:
+            with tracer.span("b") as b:
+                ctx = tracer.current_context()
+        assert ctx == TraceContext(a.span_id, b.span_id)
+
+    def test_context_survives_the_exporting_span(self):
+        # the handoff token is by-value: the admitting span may close
+        # before the executor thread adopts it
+        tracer = SpanTracer(capacity=16)
+        with tracer.span("admit") as admit:
+            ctx = tracer.current_context()
+        done = {}
+
+        def _worker():
+            with tracer.adopt(ctx):
+                with tracer.span("tick") as sp:
+                    pass
+            done["span"] = sp
+
+        t = threading.Thread(target=_worker)
+        t.start()
+        t.join()
+        assert done["span"].trace_id == admit.trace_id
+        assert done["span"].parent_id == admit.span_id
+
+    def test_set_capacity_counts_drops(self):
+        reg = MetricsRegistry()
+        tracer = SpanTracer(capacity=4, registry=reg)
+        for _ in range(10):
+            with tracer.span("w"):
+                pass
+        assert len(tracer.spans()) == 4
+        assert reg.counter("obs.spans_dropped").value == 6
+        tracer.set_capacity(8)           # resize keeps the newest spans
+        assert tracer.capacity == 8
+        assert len(tracer.spans()) == 4
+        with pytest.raises(ValueError):
+            tracer.set_capacity(0)
+
+
+# -- cross-thread handoff through the engine's double buffer ----------------
+
+class TestCrossThread:
+    def test_executor_tick_joins_admitting_trace(self, corpus):
+        data, queries = corpus
+        engine = FleetEngine(make_fleet(data), batch_size=4,
+                             routing="exhaustive")
+        with TRACER.span("test.admitting") as admitting:
+            tickets = [engine.make_ticket(api.QueryRequest(
+                series=q, k=K, request_id=i))
+                for i, q in enumerate(queries[:2])]
+        qbatch = engine.prepare_batch(tickets)
+        thread = threading.Thread(
+            target=engine.execute_prepared, args=(qbatch, tickets))
+        thread.start()
+        thread.join()
+        trace = TRACER.trace(admitting.trace_id)
+        names = {s.name for s in trace}
+        assert {"serve.tick", "fleet.query"} <= names
+        tick = next(s for s in trace if s.name == "serve.tick")
+        assert tick.thread != admitting.thread
+        assert tick.attrs["traces"] == 1
+        for t in tickets:
+            assert t.result.trace_id == admitting.trace_id
+            assert t.result.parent_span_id == tick.span_id
+
+    def test_wire_context_beats_local_context(self, corpus):
+        data, queries = corpus
+        engine = FleetEngine(make_fleet(data), batch_size=4,
+                             routing="exhaustive")
+        remote = TRACER.mint_trace_id()
+        with TRACER.span("test.local"):
+            ticket = engine.make_ticket(api.QueryRequest(
+                series=queries[0], k=K, trace_id=remote,
+                parent_span_id=77))
+        assert ticket.trace == TraceContext(remote, 77)
+
+
+# -- the acceptance test: one trace across a real localhost socket ----------
+
+class TestOneTraceAcrossSocket:
+    def test_client_query_produces_one_trace(self, corpus):
+        data, queries = corpus
+        engine = FleetEngine(make_fleet(data), batch_size=4,
+                             routing="signature")
+        server, stop = serve_in_thread(engine)
+        try:
+            with ClimberClient("127.0.0.1", server.port) as client:
+                results = client.query_batch(list(queries[:4]), k=K)
+        finally:
+            stop()
+        # every request of the batch rode the same client-minted trace
+        tids = {r.trace_id for r in results}
+        assert len(tids) == 1
+        tid = tids.pop()
+        assert tid != 0
+        spans = TRACER.trace(tid)
+        names = {s.name for s in spans}
+        assert {"net.rtt", "net.admit", "serve.tick",
+                "fleet.query"} <= names
+        # the client RTT span is part of the same trace (in-process test:
+        # same ring) and parents the server's admission spans
+        rtt = next(s for s in spans if s.name == "net.rtt")
+        assert rtt.trace_id == tid
+        for admit in (s for s in spans if s.name == "net.admit"):
+            assert admit.parent_id == rtt.span_id
+        # the tick ran on the executor thread, in the same trace
+        tick = next(s for s in spans if s.name == "serve.tick")
+        assert "exec" in tick.thread
+        # results echo the tick that answered them
+        assert all(r.parent_span_id for r in results)
+        # the tree anchors on the client span even though the trace root
+        # (the minted id) has no local span
+        tree = TRACER.tree(tid)
+        assert tree is not None and tree["name"] == "net.rtt"
+
+
+# -- compaction worker joins the triggering trace ---------------------------
+
+class TestCompactionTrace:
+    def test_compactor_spans_join_trigger_trace(self, corpus):
+        data, _ = corpus
+        fleet = IndexFleet(FleetConfig(shard_cfg=small_cfg(), fanout=2,
+                                       delta_capacity=4096,
+                                       auto_compact=False))
+        fleet.insert(data[:200])
+        with TRACER.span("test.trigger") as trigger:
+            ticket = fleet.compact_async()
+        ticket.wait(timeout=60)
+        spans = TRACER.trace(trigger.trace_id)
+        names = {s.name for s in spans}
+        assert {"compact.seal", "compact.build", "compact.swap"} <= names
+        seal = next(s for s in spans if s.name == "compact.seal")
+        assert seal.thread == "fleet-compactor"
+        assert seal.parent_id == trigger.span_id
+
+    def test_explicit_compaction_still_roots_its_own_trace(self, corpus):
+        data, _ = corpus
+        fleet = IndexFleet(FleetConfig(shard_cfg=small_cfg(), fanout=2,
+                                       delta_capacity=4096,
+                                       auto_compact=False))
+        fleet.insert(data[200:400])
+        ticket = fleet.compact_async()   # no span open: adopt is a no-op
+        ticket.wait(timeout=60)
+        seal = next(s for s in reversed(TRACER.spans())
+                    if s.name == "compact.seal")
+        assert seal.parent_id is None
+        assert seal.trace_id == seal.span_id
+
+
+# -- flight recorder --------------------------------------------------------
+
+def _request(tracer, flight, *, ms_name="serve.tick", error=None):
+    """One synthetic request trace: admit + trigger span."""
+    tid = tracer.mint_trace_id()
+    with tracer.adopt(tid):
+        with tracer.span("net.admit"):
+            if error is not None:
+                flight.note_error(tid, error)
+        if error is None:
+            with tracer.span(ms_name):
+                pass
+    return tid
+
+
+class TestFlightRecorder:
+    def test_threshold_retains_only_slow_ticks(self):
+        tracer = SpanTracer(capacity=256)
+        flight = FlightRecorder(tracer, threshold_ms=1e6, registry=None)
+        for _ in range(5):
+            _request(tracer, flight)
+        assert flight.records() == []    # nothing is slower than 1000 s
+        flight.threshold_ms = 0.0        # now everything is "slow"
+        tid = _request(tracer, flight)
+        recs = flight.records()
+        assert len(recs) == 1
+        assert recs[0]["trace_id"] == tid
+        assert recs[0]["reason"] == "latency>0ms"
+        assert {s["name"] for s in recs[0]["spans"]} == \
+            {"net.admit", "serve.tick"}
+        flight.close()
+
+    def test_quantile_gate_waits_for_warmup(self):
+        tracer = SpanTracer(capacity=256)
+        flight = FlightRecorder(tracer, quantile=0.99, min_samples=32,
+                                registry=None)
+        for _ in range(10):
+            _request(tracer, flight)
+        assert flight.records() == []    # below min_samples: gate unarmed
+        flight.close()
+
+    def test_error_retains_without_a_tick(self):
+        # a refused request never reaches serve.tick; the noted error
+        # retains on the admission span instead
+        tracer = SpanTracer(capacity=256)
+        flight = FlightRecorder(tracer, threshold_ms=1e6, registry=None)
+        tid = _request(tracer, flight, error="RETRY_LATER")
+        recs = flight.records()
+        assert len(recs) == 1
+        assert recs[0]["trace_id"] == tid
+        assert recs[0]["reason"] == "error:RETRY_LATER"
+        assert recs[0]["trigger"] == "net.admit"
+        flight.close()
+
+    def test_ring_and_open_buffers_are_bounded(self):
+        tracer = SpanTracer(capacity=1024)
+        flight = FlightRecorder(tracer, threshold_ms=0.0, capacity=8,
+                                max_open_traces=4, registry=None)
+        for _ in range(32):
+            _request(tracer, flight)
+        assert len(flight.records()) == 8
+        # traces that never hit a trigger can't grow without bound
+        for _ in range(32):
+            _request(tracer, flight, ms_name="not.a.trigger")
+        assert len(flight._open) <= 4
+        flight.close()
+
+    def test_jsonl_roundtrips(self):
+        import json
+        tracer = SpanTracer(capacity=256)
+        flight = FlightRecorder(tracer, threshold_ms=0.0, registry=None)
+        for _ in range(3):
+            _request(tracer, flight)
+        lines = flight.jsonl(limit=2).strip().splitlines()
+        assert len(lines) == 2
+        for line in lines:
+            rec = json.loads(line)
+            assert {"trace_id", "reason", "spans"} <= rec.keys()
+        flight.close()
+
+    def test_counters(self):
+        reg = MetricsRegistry()
+        tracer = SpanTracer(capacity=256)
+        flight = FlightRecorder(tracer, threshold_ms=1e6, registry=reg)
+        _request(tracer, flight)                      # dropped (fast)
+        _request(tracer, flight, error="INTERNAL")    # retained (error)
+        assert reg.counter("flight.dropped").value == 1
+        assert reg.counter("flight.retained").value == 1
+        flight.close()
+
+
+# -- admin plane ------------------------------------------------------------
+
+class TestAdminPlane:
+    def roundtrip(self, mtype, msg):
+        frame = schema.encode_message(mtype, msg)
+        got_type, length, _ = codec.decode_header(frame)
+        assert length == len(frame) - codec.HEADER_LEN
+        return schema.decode_message(got_type, frame[codec.HEADER_LEN:])
+
+    def test_schema_roundtrips(self):
+        mtype, got = self.roundtrip(schema.MsgType.METRICS,
+                                    {"page": "# HELP x\nx 1\n"})
+        assert mtype == schema.MsgType.METRICS
+        assert got["page"].startswith("# HELP")
+        health = {k: i for i, k in enumerate(schema._HEALTH_FIELDS)}
+        mtype, got = self.roundtrip(schema.MsgType.HEALTH, health)
+        assert mtype == schema.MsgType.HEALTH and got == health
+        mtype, got = self.roundtrip(
+            schema.MsgType.TRACES,
+            {"limit": 3, "count": 1, "traces_jsonl": '{"a": 1}\n'})
+        assert got == {"limit": 3, "count": 1, "traces_jsonl": '{"a": 1}\n'}
+
+    def test_admin_requests_decode_with_defaults(self):
+        # a client's admin request is an empty dict: every field defaults
+        for mtype in (schema.MsgType.METRICS, schema.MsgType.HEALTH,
+                      schema.MsgType.TRACES):
+            _, got = self.roundtrip(mtype, {})
+            assert isinstance(got, dict)
+
+    def test_admin_plane_over_live_socket(self, corpus):
+        data, queries = corpus
+        engine = FleetEngine(make_fleet(data), batch_size=4,
+                             routing="signature", sentinel_rate=1.0)
+        server, stop = serve_in_thread(engine)
+        try:
+            with ClimberClient("127.0.0.1", server.port) as client:
+                client.query_batch(list(queries[:4]), k=K)
+                engine.sentinel.drain()
+                # METRICS: the Prometheus page over the query socket
+                page = client.metrics()
+                assert "repro_net_queries_total" in page
+                assert "repro_fleet_online_recall" in page
+                assert "repro_obs_spans_dropped_total" in page
+                # HEALTH: readiness card
+                health = client.health()
+                assert health["ready"] == 1 and health["draining"] == 0
+                assert health["shards"] == 2
+                assert health["compaction_in_flight"] == 0
+                # TRACES: force a refusal, then read the retained trace
+                with pytest.raises(ServerError) as err:
+                    client.query(np.zeros(13, np.float32), k=K)
+                assert err.value.code == "BAD_REQUEST"
+                traces = client.traces()
+                assert any(t["reason"] == "error:BAD_REQUEST"
+                           for t in traces)
+                bad = next(t for t in traces
+                           if t["reason"] == "error:BAD_REQUEST")
+                assert any(s["name"] == "net.admit"
+                           for s in bad["spans"])
+        finally:
+            stop()
